@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark harness: result table printing + JSON."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def save(name: str, rows: list[dict]) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+
+
+def table(title: str, rows: list[dict], cols: list[str] | None = None) -> None:
+    print(f"\n### {title}")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = cols or list(rows[0].keys())
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    print(" | ".join(c.ljust(widths[c]) for c in cols))
+    print("-+-".join("-" * widths[c] for c in cols))
+    for r in rows:
+        print(" | ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,51 @@
+"""Fig. 6 — accuracy loss vs sampling fraction (Gaussian & Poisson),
+ApproxIoT (WHS) vs the SRS coin-flip baseline at equal end-to-end fraction.
+
+Paper claims: ApproxIoT loss ≤0.035% (Gaussian) / ≤0.013% (Poisson);
+10×/30× more accurate than SRS at fraction 10%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data import stream as S
+from repro.launch.analytics import run_pipeline
+
+from benchmarks import common
+
+FRACTIONS = (0.1, 0.2, 0.4, 0.6, 0.8)
+TICKS = 8
+SEEDS = (1, 2, 3)
+
+
+def _loss(specs, fraction, mode, seed):
+    r = run_pipeline(specs, fraction=fraction, ticks=TICKS, seed=seed,
+                     mode=mode, warmup_ticks=1)
+    return r["accuracy_loss"]
+
+
+def run() -> list[dict]:
+    rows = []
+    for dist, specs in (("gaussian", S.paper_gaussian()),
+                        ("poisson", S.paper_poisson())):
+        for f in FRACTIONS:
+            whs = float(np.mean([_loss(specs, f, "whs", s) for s in SEEDS]))
+            srs = float(np.mean([_loss(specs, f, "srs", s) for s in SEEDS]))
+            rows.append({
+                "dist": dist, "fraction": f,
+                "whs_loss": whs, "srs_loss": srs,
+                "srs_over_whs": srs / max(whs, 1e-12),
+            })
+    common.table("Fig. 6 accuracy loss vs sampling fraction", rows)
+    g10 = next(r for r in rows if r["dist"] == "gaussian" and r["fraction"] == 0.1)
+    p10 = next(r for r in rows if r["dist"] == "poisson" and r["fraction"] == 0.1)
+    print(f"paper: whs ≤0.035% gaussian / ≤0.013% poisson; ours "
+          f"{g10['whs_loss']:.5%} / {p10['whs_loss']:.5%}")
+    print(f"paper: srs/whs ≈10× gaussian, ≈30× poisson @10%; ours "
+          f"{g10['srs_over_whs']:.1f}× / {p10['srs_over_whs']:.1f}×")
+    common.save("fig6_accuracy", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

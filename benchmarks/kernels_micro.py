@@ -1,0 +1,100 @@
+"""Per-kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+Numbers here are CPU-interpret correctness + wall-time references, not TPU
+perf — the kernels' TPU perf story lives in the roofline/dry-run harness.
+Each row asserts allclose(kernel, oracle) before timing.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.flash_attention import ref as attn_ref
+from repro.kernels.sample_mask import ops as mask_ops
+from repro.kernels.sample_mask import ref as mask_ref
+from repro.kernels.sample_mask.sample_mask import sample_mask as pallas_mask
+from repro.kernels.stratified_stats import ops as stats_ops
+from repro.kernels.stratified_stats import ref as stats_ref
+from repro.kernels.stratified_stats.stratified_stats import (
+    stratified_stats as pallas_stats,
+)
+
+from benchmarks import common
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # stratified_stats: M items × X strata
+    m, x = 8192, 16
+    vals = jax.random.normal(key, (m,)) * 10 + 100
+    strata = jax.random.randint(key, (m,), 0, x)
+    mask = jax.random.uniform(key, (m,)) < 0.8
+    out_k = pallas_stats(vals, strata, mask, x, interpret=True)
+    out_r = stats_ref.stratified_stats(vals, strata, mask, x)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    rows.append({
+        "kernel": "stratified_stats", "shape": f"M={m} X={x}",
+        "pallas_interp_us": _time(lambda: pallas_stats(vals, strata, mask, x,
+                                                       interpret=True)),
+        "oracle_us": _time(lambda: stats_ops.stratified_stats(
+            vals, strata, mask, num_strata=x, impl="ref")),
+        "allclose": True,
+    })
+
+    # sample_mask: threshold select
+    res = jnp.full((x,), 100.0)
+    wts = jnp.linspace(1.0, 4.0, x)
+    pri = jax.random.uniform(key, (m,))
+    tau = mask_ops.thresholds_from_reservoirs(pri, strata, mask, res, x)
+    keep_k, w_k = pallas_mask(pri, strata, mask, tau, wts, interpret=True)
+    keep_r, w_r = mask_ref.sample_mask(pri, strata, mask, tau, wts)
+    np.testing.assert_array_equal(np.asarray(keep_k), np.asarray(keep_r))
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r), rtol=1e-6)
+    rows.append({
+        "kernel": "sample_mask", "shape": f"M={m} X={x}",
+        "pallas_interp_us": _time(lambda: pallas_mask(pri, strata, mask, tau,
+                                                      wts, interpret=True)),
+        "oracle_us": _time(lambda: mask_ref.sample_mask(pri, strata, mask,
+                                                        tau, wts)),
+        "allclose": True,
+    })
+
+    # flash attention
+    b, h, s, d = 1, 4, 512, 64
+    q = jax.random.normal(key, (b, h, s, d), jnp.float32) * 0.1
+    k_, v = q + 0.01, q - 0.01
+    out_k = attn_ops.attention(q, k_, v, causal=True, impl="pallas")
+    out_r = attn_ref.attention(q, k_, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-3, atol=2e-3)
+    rows.append({
+        "kernel": "flash_attention", "shape": f"B={b} H={h} S={s} D={d}",
+        "pallas_interp_us": _time(lambda: attn_ops.attention(
+            q, k_, v, causal=True, impl="pallas"), reps=2),
+        "oracle_us": _time(lambda: attn_ops.attention(
+            q, k_, v, causal=True, impl="xla")),
+        "allclose": True,
+    })
+
+    common.table("Pallas kernels (interpret mode) vs oracle", rows)
+    common.save("kernels_micro", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

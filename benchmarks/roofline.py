@@ -1,0 +1,49 @@
+"""Roofline table: read the dry-run artifacts and print per-(arch × shape
+× mesh) compute/memory/collective terms + dominant bottleneck.
+
+The dry-run cells are produced by ``python -m repro.launch.dryrun --all``
+(slow: lowers + compiles every cell); this module only *reads* the cached
+JSON so ``python -m benchmarks.run`` stays fast. Missing cells are listed
+so the operator knows what to (re)generate.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import common
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def run() -> list[dict]:
+    rows, missing, skipped = [], [], []
+    for f in sorted(DRYRUN.glob("*.json")) if DRYRUN.exists() else []:
+        d = json.loads(f.read_text())
+        cell = f"{d.get('arch')}×{d.get('shape')}×{d.get('mesh')}"
+        if d.get("skipped"):
+            skipped.append(cell + f" ({d.get('reason', '')[:40]})")
+            continue
+        if "error" in d:
+            missing.append(cell + " [ERROR]")
+            continue
+        t = d["terms"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "dominant": t["dominant"],
+            "roofline_frac": t["compute_fraction"],
+            "model/hlo": d.get("model_vs_hlo"),
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    common.table("Roofline terms from dry-run artifacts", rows)
+    if skipped:
+        print(f"skipped (per DESIGN.md §6): {len(skipped)}")
+    if missing:
+        print("MISSING/ERROR cells:", *missing, sep="\n  ")
+    common.save("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

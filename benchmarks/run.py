@@ -1,0 +1,58 @@
+"""Benchmark harness entry point — one module per paper table/figure plus
+the framework-integration and roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+
+Modules:
+    fig6   accuracy vs sampling fraction (WHS vs SRS; Gaussian/Poisson)
+    fig7   throughput + bandwidth vs fraction (WHS/SRS/native)   [Figs 7+8]
+    fig9   latency vs fraction and vs window size                [Figs 9+10]
+    fig11  fluctuating arrival rates + heavy skew                [Fig 11a-c]
+    fig12  real-world-like datasets (taxi, pollution)            [Fig 12]
+    train  approx-training plane (framework integration)
+    kernels per-kernel allclose + timing (interpret mode)
+    roofline dry-run roofline table (reads cached artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ("fig6", "fig7", "fig9", "fig11", "fig12", "train", "kernels",
+           "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args(argv)
+    chosen = args.only.split(",") if args.only else list(MODULES)
+
+    from benchmarks import (fig6_accuracy, fig7_throughput, fig9_latency,
+                            fig11_skew, fig12_realworld, kernels_micro,
+                            roofline, train_plane)
+    impl = {
+        "fig6": fig6_accuracy, "fig7": fig7_throughput, "fig9": fig9_latency,
+        "fig11": fig11_skew, "fig12": fig12_realworld, "train": train_plane,
+        "kernels": kernels_micro, "roofline": roofline,
+    }
+    failures = 0
+    for name in chosen:
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        t0 = time.time()
+        try:
+            impl[name].run()
+            print(f"[{name}] ok in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"[{name}] FAILED after {time.time() - t0:.1f}s")
+    print(f"\nbenchmarks done: {len(chosen) - failures}/{len(chosen)} ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,10 @@
+"""Qwen1.5-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B] — 60 routed experts top-4
++ 4 shared experts, moe_d_ff=1408."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=151936,
+    num_experts=60, num_experts_per_tok=4, num_shared_experts=4, moe_d_ff=1408,
+)

@@ -1,0 +1,8 @@
+"""SmolLM-135M [hf:HuggingFaceTB/SmolLM-135M] — small llama-arch, GQA kv=3."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-135m", family="dense",
+    num_layers=30, d_model=576, num_heads=9, num_kv_heads=3,
+    d_ff=1536, vocab_size=49152,
+)

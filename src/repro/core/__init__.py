@@ -1,0 +1,19 @@
+"""ApproxIoT core: weighted hierarchical stratified reservoir sampling.
+
+Public surface:
+    types     — IntervalBatch / StratumMeta / SampleResult / QueryResult
+    sampling  — priority-sampling primitive + reservoir allocation
+    whs       — WHSamp (Alg. 2 + Eq. 9) node step
+    srs       — simple-random-sampling baseline
+    error     — CLT error estimation (Eq. 11/14)
+    queries   — linear queries (sum/mean/count/histogram/loss)
+    tree      — host-emulated edge tree + in-graph SPMD hierarchy
+    window    — per-node interval buffers
+"""
+from repro.core import error, queries, sampling, srs, tree, whs, window  # noqa: F401
+from repro.core.types import (  # noqa: F401
+    IntervalBatch,
+    QueryResult,
+    SampleResult,
+    StratumMeta,
+)

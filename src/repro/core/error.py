@@ -1,0 +1,82 @@
+"""Error estimation for approximate linear queries (§III-D).
+
+At the root, each stratum ``S_i`` contributes ``Y_i`` uniformly-sampled
+items with effective weight ``W_i^out``. By the CLT (finite-population
+corrected):
+
+    Var(SUM_i)  = c_src_i · (c_src_i − Y_i) · s_i² / Y_i          (Eq. 11)
+    Var(MEAN_*) = Σ_i φ_i² · s_i²/Y_i · (c_src_i − Y_i)/c_src_i    (Eq. 14)
+
+with ``c_src_i`` recovered as ``Y_i · W_i^out`` (valid because either
+``Y_i = N_{i,χ}`` or the stratum was never down-sampled), ``s_i²`` the
+per-stratum sample variance, and ``φ_i = c_src_i / Σ c_src``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import QueryResult, StratumMeta
+
+
+def stratum_moments(
+    value: jnp.ndarray, stratum: jnp.ndarray, selected: jnp.ndarray, num_strata: int
+):
+    """Per-stratum (Y_i, Σx, Σx²) over the *sampled* items. All f32[X]."""
+    seg = jnp.where(selected, stratum, num_strata)
+    zeros = jnp.zeros((num_strata + 1,), jnp.float32)
+    y = zeros.at[seg].add(1.0)[:num_strata]
+    s1 = zeros.at[seg].add(jnp.where(selected, value, 0.0))[:num_strata]
+    s2 = zeros.at[seg].add(jnp.where(selected, value * value, 0.0))[:num_strata]
+    return y, s1, s2
+
+
+def sample_variance(y: jnp.ndarray, s1: jnp.ndarray, s2: jnp.ndarray) -> jnp.ndarray:
+    """Unbiased per-stratum sample variance ``s_i²`` (Eq. 12). 0 when Y_i<2."""
+    mean = s1 / jnp.maximum(y, 1.0)
+    ss = jnp.maximum(s2 - y * mean * mean, 0.0)
+    return jnp.where(y > 1.0, ss / jnp.maximum(y - 1.0, 1.0), 0.0)
+
+
+def approx_sum(
+    value: jnp.ndarray,
+    stratum: jnp.ndarray,
+    selected: jnp.ndarray,
+    meta: StratumMeta,
+    num_strata: int,
+) -> QueryResult:
+    """``SUM_* ± bound`` (Eq. 3 + Eq. 11)."""
+    y, s1, s2 = stratum_moments(value, stratum, selected, num_strata)
+    s_sq = sample_variance(y, s1, s2)
+    est_per = s1 * meta.weight                       # Eq. 2/4
+    c_src = y * meta.weight                          # §III-D
+    fpc = jnp.maximum(c_src - y, 0.0)
+    var_per = jnp.where(y > 0.0, c_src * fpc * s_sq / jnp.maximum(y, 1.0), 0.0)
+    return QueryResult(estimate=jnp.sum(est_per), variance=jnp.sum(var_per))
+
+
+def approx_mean(
+    value: jnp.ndarray,
+    stratum: jnp.ndarray,
+    selected: jnp.ndarray,
+    meta: StratumMeta,
+    num_strata: int,
+) -> QueryResult:
+    """``MEAN_* ± bound`` (Eq. 13 + Eq. 14)."""
+    y, s1, s2 = stratum_moments(value, stratum, selected, num_strata)
+    s_sq = sample_variance(y, s1, s2)
+    c_src = y * meta.weight
+    total = jnp.maximum(jnp.sum(c_src), 1.0)
+    phi = c_src / total
+    mean_per = s1 / jnp.maximum(y, 1.0)
+    est = jnp.sum(phi * mean_per)
+    var_per = jnp.where(
+        (y > 0.0) & (c_src > 0.0),
+        phi * phi * s_sq / jnp.maximum(y, 1.0) * fpc_ratio(c_src, y),
+        0.0,
+    )
+    return QueryResult(estimate=est, variance=jnp.sum(var_per))
+
+
+def fpc_ratio(c_src: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Finite-population correction ``(c_src − Y)/c_src``."""
+    return jnp.maximum(c_src - y, 0.0) / jnp.maximum(c_src, 1.0)

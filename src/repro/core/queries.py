@@ -1,0 +1,84 @@
+"""Linear queries over weighted samples.
+
+Any query of the form ``Σ_k f(item_k)`` is estimated unbiasedly from the
+weighted sample as ``Σ_i W_i^out · Σ_{k∈sample_i} f(item_k)`` — SUM, COUNT,
+MEAN, histograms, and (importantly for the training plane) the total loss
+of a token stream all fit. Each query returns a ``QueryResult`` with a CLT
+variance so the root can attach ±kσ bounds (§III-D).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core import error as err
+from repro.core.types import IntervalBatch, QueryResult, SampleResult, StratumMeta
+
+
+def weighted_sum(batch: IntervalBatch, res: SampleResult, num_strata: int) -> QueryResult:
+    return err.approx_sum(batch.value, batch.stratum, res.selected, res.meta, num_strata)
+
+
+def weighted_mean(batch: IntervalBatch, res: SampleResult, num_strata: int) -> QueryResult:
+    return err.approx_mean(batch.value, batch.stratum, res.selected, res.meta, num_strata)
+
+
+def weighted_count(batch: IntervalBatch, res: SampleResult, num_strata: int) -> QueryResult:
+    """Estimated number of items in the original stream (f = 1)."""
+    ones = jnp.ones_like(batch.value)
+    return err.approx_sum(ones, batch.stratum, res.selected, res.meta, num_strata)
+
+
+def weighted_histogram(
+    batch: IntervalBatch,
+    res: SampleResult,
+    num_strata: int,
+    edges: jnp.ndarray,
+) -> QueryResult:
+    """Estimated item-count per value bin — a vector of linear queries.
+
+    ``edges`` f32[B+1] monotone. Returns estimate f32[B] with per-bin
+    variance (each bin indicator is a linear query; bins share samples so
+    variances are per-bin CLT, covariances ignored as in the paper).
+    """
+    nbins = edges.shape[0] - 1
+    bin_ix = jnp.clip(jnp.searchsorted(edges, batch.value, side="right") - 1, 0, nbins - 1)
+    w_item = res.meta.weight[batch.stratum]
+    sel = res.selected
+    est = jnp.zeros((nbins,), jnp.float32).at[jnp.where(sel, bin_ix, nbins - 1)].add(
+        jnp.where(sel, w_item, 0.0)
+    )
+    # Per-bin Bernoulli-in-stratum variance, aggregated over strata: for an
+    # indicator query, s² within stratum is p(1-p); use the plug-in estimate.
+    y_i, _, _ = err.stratum_moments(batch.value, batch.stratum, sel, num_strata)
+    var = jnp.zeros((nbins,), jnp.float32)
+    # Plug-in: var_bin ≈ Σ_items w_item·(w_item−1) over sampled items in bin.
+    contrib = jnp.where(sel, w_item * jnp.maximum(w_item - 1.0, 0.0), 0.0)
+    var = var.at[jnp.where(sel, bin_ix, nbins - 1)].add(contrib)
+    return QueryResult(estimate=est, variance=var)
+
+
+def map_query(
+    f: Callable[[jnp.ndarray], jnp.ndarray],
+    batch: IntervalBatch,
+    res: SampleResult,
+    num_strata: int,
+) -> QueryResult:
+    """Generic linear query ``Σ f(item)`` — the extension point for users."""
+    return err.approx_sum(f(batch.value), batch.stratum, res.selected, res.meta, num_strata)
+
+
+def weighted_loss(
+    per_example_loss: jnp.ndarray,
+    stratum: jnp.ndarray,
+    selected: jnp.ndarray,
+    meta: StratumMeta,
+) -> jnp.ndarray:
+    """Training-plane query: unbiased mean loss of the *full* stream.
+
+    ``E[Σ_sel w·loss / Σ_sel w·1] ≈ full-stream mean loss`` — the ratio
+    estimator the approximate-training pipeline feeds to ``grad``.
+    """
+    w = meta.weight[stratum] * selected.astype(jnp.float32)
+    return jnp.sum(w * per_example_loss) / jnp.maximum(jnp.sum(w), 1e-9)

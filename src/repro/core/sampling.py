@@ -1,0 +1,124 @@
+"""Stratified reservoir sampling, adapted for TPU as *priority sampling*.
+
+The paper's per-stratum reservoir sampling (Vitter's Algorithm R inside
+Alg. 2, line 10) is inherently sequential: item ``i`` is kept with
+probability ``N/i`` and evicts a random resident. Its *output
+distribution*, however, is simply "a uniform random subset of size
+``min(c, N)`` without replacement". We realize that distribution with a
+branch-free, fully-parallel equivalent:
+
+    draw an i.i.d. priority  u_k ~ U(0,1)  per item,
+    keep the stratum's top-``N_i`` items by priority.
+
+Equivalence: every size-``min(c,N)`` subset of a stratum is equally likely
+under both schemes. Priority sampling additionally merges across shards
+for free (top-``N`` of a union of priority-tagged samples is a valid
+sample of the union — used for §III-E distributed execution), and lowers
+to one sort + gathers on TPU instead of a data-dependent loop.
+
+All shapes are static; the dynamic item count rides in ``valid``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stratum_counts(stratum: jnp.ndarray, valid: jnp.ndarray, num_strata: int) -> jnp.ndarray:
+    """``c_i``: number of valid items per stratum. f32[X]."""
+    seg = jnp.where(valid, stratum, num_strata)
+    return jnp.zeros((num_strata + 1,), jnp.float32).at[seg].add(1.0)[:num_strata]
+
+
+def allocate_reservoirs(
+    sample_size: jnp.ndarray,
+    counts: jnp.ndarray,
+    *,
+    policy: str = "fair",
+    water_fill_iters: int = 4,
+) -> jnp.ndarray:
+    """``getSampleSize`` (Alg. 2 line 7): split the interval budget across strata.
+
+    ``fair`` (default): equal share per *active* stratum, with water-filling —
+    capacity unused by small strata (``c_i < share``) is iteratively
+    redistributed to the rest. This is what gives ApproxIoT its skew
+    robustness (§V-E): a stratum with 0.01% of the items still gets a full
+    share of the reservoir.
+
+    ``proportional``: ``N_i ∝ c_i`` (what SRS approximates in expectation);
+    kept for ablations.
+    """
+    counts = counts.astype(jnp.float32)
+    active = counts > 0
+    n_active = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
+    sample_size = jnp.asarray(sample_size, jnp.float32)
+
+    if policy == "proportional":
+        total = jnp.maximum(jnp.sum(counts), 1.0)
+        return jnp.where(active, jnp.floor(sample_size * counts / total), 0.0)
+
+    if policy != "fair":
+        raise ValueError(f"unknown allocation policy: {policy}")
+
+    def body(_, alloc):
+        # alloc: current per-stratum cap. Strata smaller than their cap
+        # release the surplus; it is re-split among the still-capped strata.
+        used = jnp.minimum(alloc, counts)
+        surplus = jnp.sum(alloc - used)
+        capped = active & (counts > alloc)
+        n_capped = jnp.maximum(jnp.sum(capped.astype(jnp.float32)), 1.0)
+        bump = jnp.where(capped, jnp.floor(surplus / n_capped), 0.0)
+        return jnp.where(active, used + bump, 0.0)
+
+    share = jnp.where(active, jnp.floor(sample_size / n_active), 0.0)
+    alloc = jax.lax.fori_loop(0, water_fill_iters, body, share)
+    # N_i > c_i and N_i = c_i are equivalent (all items kept, weight 1), so
+    # clamping to c_i loses nothing and makes Y_i = N_i hold when saturated.
+    return jnp.where(active, jnp.minimum(alloc, counts), 0.0)
+
+
+def stratified_priority_sample(
+    key: jax.Array,
+    stratum: jnp.ndarray,
+    valid: jnp.ndarray,
+    reservoirs: jnp.ndarray,
+    num_strata: int,
+    priorities: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Select per-stratum top-``N_i``-by-priority items. Returns bool[M].
+
+    Exactly reproduces per-stratum reservoir sampling's output law
+    (uniform w/o replacement, size ``min(c_i, N_i)``).
+    """
+    m = stratum.shape[0]
+    if priorities is None:
+        priorities = jax.random.uniform(key, (m,))
+    # Composite sort key: [stratum, descending priority]; invalid items are
+    # banished to a sentinel stratum that sorts last.
+    seg = jnp.where(valid, stratum, num_strata).astype(jnp.float32)
+    sort_key = seg * 2.0 + (1.0 - jnp.where(valid, priorities, -0.5))
+    order = jnp.argsort(sort_key)
+
+    counts_ext = jnp.zeros((num_strata + 2,), jnp.int32).at[
+        jnp.where(valid, stratum, num_strata)
+    ].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts_ext)[:-1]])
+
+    seg_sorted = jnp.where(valid, stratum, num_strata)[order]
+    rank = jnp.arange(m, dtype=jnp.int32) - starts[seg_sorted]
+    res_ext = jnp.concatenate([reservoirs.astype(jnp.int32), jnp.zeros((2,), jnp.int32)])
+    keep_sorted = rank < res_ext[seg_sorted]
+
+    return jnp.zeros((m,), bool).at[order].set(keep_sorted) & valid
+
+
+def merge_priority_samples(
+    priorities_a: jnp.ndarray, priorities_b: jnp.ndarray
+) -> jnp.ndarray:
+    """§III-E merge helper: union of two priority-tagged shard samples.
+
+    Because selection is "top-N by i.i.d. priority", two workers' local
+    reservoirs merge by concatenation + re-selection — no coordination.
+    Returns the concatenated priority vector (caller re-runs selection).
+    """
+    return jnp.concatenate([priorities_a, priorities_b], axis=0)

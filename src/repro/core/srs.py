@@ -1,0 +1,43 @@
+"""Simple Random Sampling baseline (§IV-B "coin flip sampling").
+
+The paper's comparison baseline: every item is kept independently with
+probability ``fraction`` regardless of its stratum. The estimator for a
+linear query scales the sample aggregate by ``1/fraction``. Under skewed
+sub-stream arrival rates this overlooks rare-but-significant strata
+(Fig. 11c), which is exactly what ApproxIoT's stratified allocation fixes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import IntervalBatch, QueryResult
+
+
+def srs_select(key: jax.Array, batch: IntervalBatch, fraction: float | jnp.ndarray) -> jnp.ndarray:
+    """Bernoulli(fraction) coin flip per valid item. Returns bool[M]."""
+    u = jax.random.uniform(key, (batch.capacity,))
+    return (u < fraction) & batch.valid
+
+
+def srs_sum(batch: IntervalBatch, selected: jnp.ndarray, fraction: float) -> QueryResult:
+    """Horvitz–Thompson estimate of the interval SUM under SRS.
+
+    Var: Bernoulli sampling variance  Σ x_k² · (1−p)/p  over kept items'
+    population — estimated from the sample as Σ_{k∈sample} x_k²·(1−p)/p².
+    """
+    x = jnp.where(selected, batch.value, 0.0)
+    p = jnp.asarray(fraction, jnp.float32)
+    est = jnp.sum(x) / p
+    var = jnp.sum(x * x) * (1.0 - p) / (p * p)
+    return QueryResult(estimate=est, variance=var)
+
+
+def srs_mean(batch: IntervalBatch, selected: jnp.ndarray, fraction: float) -> QueryResult:
+    """Plain sample mean under SRS (self-weighting)."""
+    n = jnp.maximum(jnp.sum(selected.astype(jnp.float32)), 1.0)
+    x = jnp.where(selected, batch.value, 0.0)
+    mean = jnp.sum(x) / n
+    ss = jnp.sum(jnp.where(selected, (batch.value - mean) ** 2, 0.0))
+    s_sq = ss / jnp.maximum(n - 1.0, 1.0)
+    return QueryResult(estimate=mean, variance=s_sq / n)

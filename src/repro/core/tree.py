@@ -1,0 +1,287 @@
+"""Hierarchy executors: the paper's logical tree, two ways.
+
+``HostTree``  — a discrete-tick emulation of the edge topology (the Kafka
+pipeline of §IV): per-node windows, asynchronous intervals, compacted
+forwarding, query + error bounds at the root. Drives the jitted node step;
+used by benchmarks/examples to reproduce Figs. 6–12.
+
+``spmd_local_then_root`` — the in-graph two-level hierarchy used at pod
+scale: every device samples its local sub-streams, compacts, all-gathers
+the *reservoirs only* (this is the bandwidth saving), and the root stage
+re-samples + answers the query. Pure ``shard_map``-compatible function; no
+coordination beyond one all-gather of sampled data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import error as err
+from repro.core import whs
+from repro.core.types import IntervalBatch, QueryResult, StratumMeta
+
+
+# --------------------------------------------------------------------------
+# Jitted per-node interval step (shared across nodes of equal geometry).
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _node_step(capacity: int, num_strata: int, out_capacity: int, allocation: str):
+    @jax.jit
+    def step(key, values, strata, valid, w_in, c_in, sample_size):
+        batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
+        res = whs.whsamp(key, batch, sample_size, num_strata, allocation=allocation)
+        out = whs.compact_sample(batch, res, out_capacity)
+        return out.value, out.stratum, out.valid, res.meta.weight, res.meta.count, res.y
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _root_step(capacity: int, num_strata: int, allocation: str,
+               hist_bins: int = 64):
+    """Root = sampling + the user query (§III-A lines 16-20). The query here
+    is the paper's evaluation workload: windowed SUM and MEAN with error
+    bounds, plus a value histogram (a representative GROUP-BY aggregate —
+    the datacenter node runs the real analytics, not just the sampler)."""
+    from repro.core import queries
+
+    @jax.jit
+    def step(key, values, strata, valid, w_in, c_in, sample_size):
+        batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
+        res = whs.whsamp(key, batch, sample_size, num_strata, allocation=allocation)
+        s = err.approx_sum(batch.value, batch.stratum, res.selected, res.meta, num_strata)
+        m = err.approx_mean(batch.value, batch.stratum, res.selected, res.meta, num_strata)
+        lo = jnp.min(jnp.where(res.selected, batch.value, jnp.inf))
+        hi = jnp.max(jnp.where(res.selected, batch.value, -jnp.inf))
+        edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
+        h = queries.weighted_histogram(batch, res, num_strata, edges)
+        return (s.estimate, s.variance, m.estimate, m.variance,
+                jnp.sum(res.selected.astype(jnp.int32)), h.estimate)
+
+    return step
+
+
+# --- SRS baseline (§IV-B): coin-flip keep at every node, HT estimate at root.
+@functools.lru_cache(maxsize=None)
+def _srs_node_step(capacity: int, num_strata: int, out_capacity: int):
+    from repro.core import srs
+
+    @jax.jit
+    def step(key, values, strata, valid, w_in, c_in, p_keep):
+        batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
+        selected = srs.srs_select(key, batch, p_keep)
+        # compact without weight bookkeeping (SRS carries no metadata)
+        order = jnp.argsort(jnp.where(selected, 0, 1), stable=True)
+        take = order[:out_capacity]
+        n_sel = jnp.sum(selected.astype(jnp.int32))
+        slot_valid = jnp.arange(out_capacity) < n_sel
+        return values[take], strata[take], slot_valid, w_in, c_in, n_sel
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _srs_root_step(capacity: int, num_strata: int, hist_bins: int = 64):
+    """Same query workload as the WHS root (fair throughput comparison):
+    SUM/MEAN + histogram, with Horvitz–Thompson 1/f weights."""
+    from repro.core import srs
+
+    @jax.jit
+    def step(key, values, strata, valid, w_in, c_in, p_keep, f_total):
+        batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
+        selected = srs.srs_select(key, batch, p_keep)
+        s = srs.srs_sum(batch, selected, f_total)
+        m = srs.srs_mean(batch, selected, f_total)
+        lo = jnp.min(jnp.where(selected, batch.value, jnp.inf))
+        hi = jnp.max(jnp.where(selected, batch.value, -jnp.inf))
+        edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
+        bin_ix = jnp.clip(jnp.searchsorted(edges, batch.value, side="right") - 1,
+                          0, hist_bins - 1)
+        hist = jnp.zeros((hist_bins,), jnp.float32).at[
+            jnp.where(selected, bin_ix, hist_bins - 1)
+        ].add(jnp.where(selected, 1.0 / f_total, 0.0))
+        return (s.estimate, s.variance, m.estimate, m.variance,
+                jnp.sum(selected.astype(jnp.int32)), hist)
+
+    return step
+
+
+class HostTree:
+    """Emulated edge topology (default geometry = the paper's testbed:
+    8 sources → 4 edge nodes → 2 edge nodes → 1 root).
+
+    ``mode="whs"`` runs the paper's weighted hierarchical sampler;
+    ``mode="srs"`` runs the §IV-B coin-flip baseline (per-level keep
+    probability ``p_level`` so the end-to-end fraction matches WHS's).
+    Per-level processing wall-time is accumulated in ``level_time_s``
+    (drives the Fig. 9/10 latency model)."""
+
+    def __init__(
+        self,
+        fanin: list[int],                 # nodes per level, root last, e.g. [4, 2, 1]
+        num_strata: int,
+        capacity: int,
+        sample_sizes: list[int],          # per level: interval budget
+        interval_ticks: list[int] | None = None,
+        allocation: str = "fair",
+        seed: int = 0,
+        mode: str = "whs",                # whs | srs
+        fraction: float | None = None,    # srs: end-to-end sampling fraction
+    ):
+        from repro.core.window import Window
+
+        assert fanin[-1] == 1, "last level must be the single root"
+        assert mode in ("whs", "srs")
+        self.fanin = fanin
+        self.num_strata = num_strata
+        self.allocation = allocation
+        self.sample_sizes = sample_sizes
+        self.mode = mode
+        self.fraction = fraction
+        # SRS keeps items with the same probability at every level so the
+        # compounded keep-rate equals the end-to-end ``fraction``.
+        self.p_level = (float(fraction) ** (1.0 / len(fanin))
+                        if fraction is not None else 1.0)
+        interval_ticks = interval_ticks or [1] * len(fanin)
+        self.levels: list[list[Window]] = []
+        cap = capacity
+        for lvl, n_nodes in enumerate(fanin):
+            self.levels.append([Window(cap, num_strata, interval_ticks[lvl]) for _ in range(n_nodes)])
+            if lvl + 1 < len(fanin):
+                # Next level's buffer: every child may forward a full budget
+                # per interval; 2x slack absorbs interval misalignment (§III-C).
+                children_per_parent = -(-n_nodes // fanin[lvl + 1])  # ceil
+                cap = max(2 * sample_sizes[lvl] * children_per_parent, 64)
+        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        self.items_forwarded = [0] * len(fanin)   # bandwidth accounting (Fig. 8)
+        self.items_ingested = 0
+        self.level_time_s = [0.0] * len(fanin)    # processing time (Fig. 9/10)
+        self.results: list[dict] = []
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def ingest(self, node: int, values: np.ndarray, strata: np.ndarray) -> None:
+        """Source → level-0 node delivery."""
+        self.items_ingested += len(values)
+        self.levels[0][node].deliver(values, strata)
+
+    def tick(self, t: int) -> None:
+        """Advance one global tick: flush every due window, push upstream."""
+        import time as _time
+
+        for lvl, nodes in enumerate(self.levels):
+            is_root = lvl == len(self.levels) - 1
+            n_parents = self.fanin[lvl + 1] if not is_root else 1
+            for ix, win in enumerate(nodes):
+                if not win.due(t) or win.fill == 0:
+                    continue
+                values, strata, valid, w_in, c_in = win.flush()
+                key = self._next_key()
+                t0 = _time.perf_counter()
+                if is_root:
+                    if self.mode == "srs":
+                        step = _srs_root_step(win.capacity, self.num_strata)
+                        se, sv, me, mv, nsel, hist = step(
+                            key, values, strata, valid, w_in, c_in,
+                            jnp.float32(self.p_level), jnp.float32(self.fraction))
+                        hist = np.asarray(hist)
+                    else:
+                        step = _root_step(win.capacity, self.num_strata, self.allocation)
+                        se, sv, me, mv, nsel, hist = step(
+                            key, values, strata, valid, w_in, c_in,
+                            jnp.float32(self.sample_sizes[lvl]))
+                        hist = np.asarray(hist)
+                    se = float(se)
+                    self.level_time_s[lvl] += _time.perf_counter() - t0
+                    self.results.append(dict(
+                        tick=t, sum=se, sum_var=float(sv),
+                        mean=float(me), mean_var=float(mv), n_sampled=int(nsel),
+                        histogram=hist,
+                    ))
+                else:
+                    out_cap = self.sample_sizes[lvl]
+                    if self.mode == "srs":
+                        step = _srs_node_step(win.capacity, self.num_strata, out_cap)
+                        ov, os_, oval, w_out, c_out, _ = step(
+                            key, values, strata, valid, w_in, c_in,
+                            jnp.float32(self.p_level))
+                    else:
+                        step = _node_step(win.capacity, self.num_strata, out_cap,
+                                          self.allocation)
+                        ov, os_, oval, w_out, c_out, _ = step(
+                            key, values, strata, valid, w_in, c_in,
+                            jnp.float32(self.sample_sizes[lvl]))
+                    ov, os_, oval = np.asarray(ov), np.asarray(os_), np.asarray(oval)
+                    self.level_time_s[lvl] += _time.perf_counter() - t0
+                    n = int(oval.sum())
+                    self.items_forwarded[lvl] += n
+                    parent = self.levels[lvl + 1][ix % n_parents]
+                    parent.deliver(ov[:n], os_[:n], np.asarray(w_out), np.asarray(c_out))
+
+
+# --------------------------------------------------------------------------
+# In-graph SPMD hierarchy (pod-scale data plane).
+# --------------------------------------------------------------------------
+def spmd_local_then_root(
+    key: jax.Array,
+    batch: IntervalBatch,
+    *,
+    axis_name: str,
+    num_strata: int,
+    local_budget: int,
+    root_budget: int,
+    allocation: str = "fair",
+) -> tuple[QueryResult, QueryResult]:
+    """Two-level hierarchical sampling across a mesh axis.
+
+    Level 1 (edge): each device samples its local interval batch and
+    compacts to ``local_budget`` slots. Level 2 (root): the compacted
+    reservoirs — not the raw stream — are all-gathered and re-sampled,
+    then SUM/MEAN + error bounds are computed. Returns (sum, mean).
+
+    Call under ``shard_map`` with ``axis_name`` bound, e.g. the "data"
+    axis; every device computes the root stage redundantly (no single
+    point of failure, no coordination — §III-E).
+    """
+    # Local stage: per-device key. Root stage: the SAME key on every device
+    # so the redundantly-computed root result is bit-identical (replicated).
+    k_local = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    k_root = jax.random.fold_in(key, 0x5F3759DF)
+    res = whs.whsamp(k_local, batch, jnp.float32(local_budget), num_strata, allocation=allocation)
+    compact = whs.compact_sample(batch, res, local_budget)
+
+    g_val = jax.lax.all_gather(compact.value, axis_name, tiled=True)
+    g_str = jax.lax.all_gather(compact.stratum, axis_name, tiled=True)
+    g_vld = jax.lax.all_gather(compact.valid, axis_name, tiled=True)
+    # Workers sample disjoint shards of each sub-stream (§III-E): the union
+    # of their per-stratum reservoirs carries per-worker weights. Merging
+    # parallel workers uses the count-weighted mean (the pool represents
+    # Σ w_k·C_k originals over Σ C_k forwarded items) — see core/window.py
+    # for why Eq. 5's max rule is path-only and biases parallel merges.
+    g_c = jax.lax.psum(compact.meta.count, axis_name)
+    g_w = (jax.lax.psum(compact.meta.weight * compact.meta.count, axis_name)
+           / jnp.maximum(g_c, 1.0))
+    # Strata empty across all workers: weight is irrelevant (no items) —
+    # use 1 so the result stays replicated across the axis.
+    g_w = jnp.where(g_c > 0.0, g_w, 1.0)
+
+    root_batch = IntervalBatch(g_val, g_str, g_vld, StratumMeta(g_w, g_c))
+    res_root = whs.whsamp(k_root, root_batch, jnp.float32(root_budget), num_strata,
+                          allocation=allocation)
+    s = err.approx_sum(root_batch.value, root_batch.stratum, res_root.selected,
+                       res_root.meta, num_strata)
+    m = err.approx_mean(root_batch.value, root_batch.stratum, res_root.selected,
+                        res_root.meta, num_strata)
+    # The root stage is computed redundantly from all-gathered (identical)
+    # data + an axis-invariant key, so results are replicated in value; a
+    # scalar pmean re-types them as invariant for shard_map's vma check
+    # (all_gather outputs stay `varying` under JAX's vma typing).
+    rep = lambda t: jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), t)
+    return rep(s), rep(m)

@@ -1,0 +1,84 @@
+"""Core data model for the ApproxIoT stream-analytics plane.
+
+The unit of work is an *interval batch*: a fixed-capacity flat buffer of
+items observed by one node during one time interval, tagged with the
+stratum (sub-stream / source id) of each item plus per-stratum metadata
+(weight set ``W`` and count set ``C``) received from downstream nodes
+(Alg. 1 of the paper).
+
+Fixed capacity keeps every array shape static so the whole pipeline jits,
+scans, and shards; the ``valid`` mask carries the dynamic item count.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class StratumMeta(NamedTuple):
+    """Per-stratum metadata sets (``W^in/out``, ``C^in/out`` in the paper).
+
+    Shapes: ``[num_strata]``. ``weight`` is the effective inverse sampling
+    probability accumulated along the upstream path (Eq. 1 / Eq. 9);
+    ``count`` is the number of items the immediate downstream node forwarded
+    for the stratum (``C`` set, §III-C).
+    """
+
+    weight: jnp.ndarray  # f32[X]
+    count: jnp.ndarray   # f32[X]
+
+    @staticmethod
+    def identity(num_strata: int) -> "StratumMeta":
+        """Source-level metadata: weight 1, count 0 (no downstream node)."""
+        return StratumMeta(
+            weight=jnp.ones((num_strata,), jnp.float32),
+            count=jnp.zeros((num_strata,), jnp.float32),
+        )
+
+
+class IntervalBatch(NamedTuple):
+    """All items a node observes for one time interval.
+
+    ``value``   f32[M]  — item payload (measurement, fare, loss, ...).
+    ``stratum`` i32[M]  — source / sub-stream id in ``[0, num_strata)``.
+    ``valid``   bool[M] — which slots hold real items this interval.
+    ``meta``            — most recent ``W^in``/``C^in`` sets (§III-C keeps
+                          the latest value per stratum across intervals).
+    """
+
+    value: jnp.ndarray
+    stratum: jnp.ndarray
+    valid: jnp.ndarray
+    meta: StratumMeta
+
+    @property
+    def capacity(self) -> int:
+        return self.value.shape[0]
+
+
+class SampleResult(NamedTuple):
+    """Output of one ``WHSamp`` call (Alg. 2).
+
+    ``selected`` bool[M] — membership of each input slot in the sample.
+    ``meta``             — the outgoing ``W^out``/``C^out`` sets.
+    ``c``        f32[X]  — items observed per stratum this interval.
+    ``y``        f32[X]  — items selected per stratum (``Y_i = min(c_i,N_i)``).
+    ``reservoir`` f32[X] — the reservoir size ``N_i`` used per stratum.
+    """
+
+    selected: jnp.ndarray
+    meta: StratumMeta
+    c: jnp.ndarray
+    y: jnp.ndarray
+    reservoir: jnp.ndarray
+
+
+class QueryResult(NamedTuple):
+    """Approximate query output with rigorous error bounds (§III-D)."""
+
+    estimate: jnp.ndarray   # scalar or [X]
+    variance: jnp.ndarray   # matching shape
+    # 68-95-99.7 rule: bound_k = k * sqrt(variance)
+    def bound(self, sigmas: float = 2.0) -> jnp.ndarray:
+        return sigmas * jnp.sqrt(jnp.maximum(self.variance, 0.0))

@@ -1,0 +1,108 @@
+"""Weighted Hierarchical Sampling — Alg. 2 with the §III-C async fix (Eq. 9).
+
+One ``whsamp`` call is one node × one time interval. It is a pure function
+of the interval batch + RNG key, so it jits, vmaps over nodes, and runs
+under ``shard_map`` with zero cross-node coordination — the property the
+paper's scalability argument rests on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from repro.core.types import IntervalBatch, SampleResult, StratumMeta
+
+
+def whsamp(
+    key: jax.Array,
+    batch: IntervalBatch,
+    sample_size: jnp.ndarray,
+    num_strata: int,
+    *,
+    allocation: str = "fair",
+    async_calibration: bool = True,
+) -> SampleResult:
+    """Run WHSamp over one interval batch.
+
+    Weight update (Alg. 2 lines 12–20, with line 14 replaced by Eq. 9):
+
+        w_i      = c_i / N_i            if c_i > N_i   else 1
+        W_i^out  = W_i^in · w_i · C_i^in / c_i          (Eq. 9)
+        C_i^out  = Y_i = min(c_i, N_i)
+
+    With synchronized intervals ``C_i^in == c_i`` and Eq. 9 reduces to the
+    plain Eq. 1 update. At a source node ``W^in = 1`` and ``C^in = 0``
+    (sentinel meaning "no downstream sampler"), so the calibration factor
+    is forced to 1.
+    """
+    c = sampling.stratum_counts(batch.stratum, batch.valid, num_strata)
+    reservoirs = sampling.allocate_reservoirs(sample_size, c, policy=allocation)
+    selected = sampling.stratified_priority_sample(
+        key, batch.stratum, batch.valid, reservoirs, num_strata
+    )
+    y = jnp.minimum(c, jnp.maximum(reservoirs, 0.0))
+
+    safe_n = jnp.maximum(reservoirs, 1.0)
+    w_local = jnp.where(c > reservoirs, c / safe_n, 1.0)
+
+    if async_calibration:
+        # Eq. 9: calibrate by C^in / c — corrects the α bias when the
+        # downstream node's interval straddles ours. C^in == 0 marks a
+        # source stream (no downstream node): factor 1.
+        calib = jnp.where(
+            (batch.meta.count > 0.0) & (c > 0.0), batch.meta.count / jnp.maximum(c, 1.0), 1.0
+        )
+    else:
+        calib = jnp.ones_like(c)
+
+    w_out = batch.meta.weight * w_local * calib
+    # Strata absent this interval keep their previous weight (§III-C: a node
+    # maintains the most recent sets and only updates on arrival).
+    w_out = jnp.where(c > 0.0, w_out, batch.meta.weight)
+    c_out = jnp.where(c > 0.0, y, batch.meta.count)
+
+    return SampleResult(
+        selected=selected,
+        meta=StratumMeta(weight=w_out, count=c_out),
+        c=c,
+        y=y,
+        reservoir=reservoirs,
+    )
+
+
+def apply_sample(batch: IntervalBatch, result: SampleResult) -> IntervalBatch:
+    """Forward step (Alg. 1 line 13): the upstream-bound interval batch.
+
+    Sampled-out slots become invalid; values/strata stay in place (the
+    fixed-capacity layout means "sending" is just masking — compaction is
+    a host-side/transport concern, see ``core.tree``).
+    """
+    return IntervalBatch(
+        value=batch.value,
+        stratum=batch.stratum,
+        valid=result.selected,
+        meta=result.meta,
+    )
+
+
+def compact_sample(
+    batch: IntervalBatch, result: SampleResult, out_capacity: int
+) -> IntervalBatch:
+    """Pack selected items into a smaller buffer of ``out_capacity`` slots.
+
+    This is the bandwidth saving of the paper (Fig. 8): a node forwards
+    ``Σ_i Y_i ≤ sample_size`` items upstream, not the whole interval.
+    Deterministic gather via sort-by-(!selected) keeps everything static.
+    """
+    m = batch.capacity
+    order = jnp.argsort(jnp.where(result.selected, 0, 1), stable=True)
+    take = order[:out_capacity]
+    n_sel = jnp.sum(result.selected.astype(jnp.int32))
+    slot_valid = jnp.arange(out_capacity) < n_sel
+    return IntervalBatch(
+        value=batch.value[take],
+        stratum=batch.stratum[take],
+        valid=slot_valid,
+        meta=result.meta,
+    )

@@ -1,0 +1,87 @@
+"""Interval / window bookkeeping (§III-A "foreach time interval").
+
+Each node owns its intervals — they are *not* synchronized across nodes
+(§III-C). A ``Window`` accumulates delivered items into a fixed-capacity
+buffer and flushes when its interval elapses.
+
+Metadata combination rules (this is where Alg. 1's "getDataStream"
+semantics live):
+
+* Within one interval a node may receive **several messages** carrying
+  ``(W^out, C^out)`` sets — from multiple children, and/or several
+  intervals' worth from the same child. The per-stratum counts **sum**
+  (``C^in_i`` must equal the total number of items the downstream layer
+  forwarded for stratum *i* during *this* node's interval, or Eq. 9's
+  ``C^in/c`` calibration is biased by the number of messages). The weights
+  combine with the **count-weighted mean**: a merged pool of messages
+  ``(w_k, C_k)`` represents ``Σ w_k·C_k`` original items over ``Σ C_k``
+  forwarded ones, so ``W^in = Σ w_k C_k / Σ C_k``. (The paper's Eq. 5
+  ``max`` rule is for combining nodes along a single upstream *path*;
+  applied across parallel children with stochastic counts it inflates the
+  estimate by ``E[max c] / E[c] ≈ +2%`` per merge level — measured, see
+  EXPERIMENTS.md. The count-weighted mean is the unbiased merge.)
+* Across intervals the sets are **sticky** (§III-C, Fig. 3): items that
+  arrive before their metadata use the most recent saved ``W^in``/``C^in``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Window:
+    def __init__(self, capacity: int, num_strata: int, interval_ticks: int):
+        self.capacity = int(capacity)
+        self.num_strata = int(num_strata)
+        self.interval_ticks = int(interval_ticks)
+        # Sticky sets: most recent effective W^in / C^in per stratum.
+        self.w_in = np.ones((num_strata,), np.float32)
+        self.c_in = np.zeros((num_strata,), np.float32)
+        self._reset()
+
+    def _reset(self) -> None:
+        self.values = np.zeros((self.capacity,), np.float32)
+        self.strata = np.zeros((self.capacity,), np.int32)
+        self.fill = 0
+        self.dropped = 0
+        # This-interval metadata accumulators: Σ w·C and Σ C per stratum.
+        self._wc_acc = np.zeros((self.num_strata,), np.float64)
+        self._c_acc = np.zeros((self.num_strata,), np.float64)
+        self._seen = np.zeros((self.num_strata,), bool)
+
+    def deliver(self, values: np.ndarray, strata: np.ndarray,
+                weight: np.ndarray | None = None, count: np.ndarray | None = None) -> None:
+        """Append items; fold the message's W/C sets into this interval."""
+        if weight is not None and count is not None:
+            present = np.zeros((self.num_strata,), bool)
+            present[np.unique(strata)] = True
+            w = weight.astype(np.float64)
+            c = count.astype(np.float64)
+            self._wc_acc = np.where(present, self._wc_acc + w * c, self._wc_acc)
+            self._c_acc = np.where(present, self._c_acc + c, self._c_acc)
+            self._seen |= present
+        n = len(values)
+        take = min(n, self.capacity - self.fill)
+        if take < n:
+            self.dropped += n - take  # backpressure accounting
+        self.values[self.fill : self.fill + take] = values[:take]
+        self.strata[self.fill : self.fill + take] = strata[:take]
+        self.fill += take
+
+    def due(self, tick: int) -> bool:
+        return tick % self.interval_ticks == 0
+
+    def flush(self):
+        """Return (values, strata, valid, w_in, c_in) and reset the buffer.
+
+        Strata with fresh metadata this interval use the accumulated sets;
+        the rest fall back to the sticky values (§III-C)."""
+        valid = np.zeros((self.capacity,), bool)
+        valid[: self.fill] = True
+        w_merged = self._wc_acc / np.maximum(self._c_acc, 1.0)
+        w_eff = np.where(self._seen, w_merged, self.w_in).astype(np.float32)
+        c_eff = np.where(self._seen, self._c_acc, self.c_in).astype(np.float32)
+        self.w_in, self.c_in = w_eff, c_eff  # refresh stickies
+        out = (self.values.copy(), self.strata.copy(), valid,
+               w_eff.copy(), c_eff.copy())
+        self._reset()
+        return out

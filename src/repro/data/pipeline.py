@@ -1,0 +1,81 @@
+"""Approximate training data pipeline: ApproxIoT sampling in front of SGD.
+
+Each interval, a shard's arriving examples are stratified by domain and
+reservoir-sampled within the interval budget (``whsamp``); the surviving
+examples carry ``W^out`` weights so the weighted loss is an unbiased
+estimate of the full-stream loss. This is the paper's edge-sampling tree
+with DP shards as the edge nodes and the train step as the root query.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import whs
+from repro.core.types import IntervalBatch, StratumMeta
+from repro.data.stream import TokenStream
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    batch_size: int          # examples per step fed to the model
+    interval_size: int       # examples arriving per interval (pre-sampling)
+    num_strata: int
+    sampling_fraction: float = 0.5
+    allocation: str = "fair"
+    seed: int = 0
+
+
+class ApproxTrainPipeline:
+    """Host-side loop: stream → stratified sample → weighted batches."""
+
+    def __init__(self, cfg: PipelineConfig, stream: TokenStream):
+        self.cfg = cfg
+        self.stream = stream
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._sample = jax.jit(self._sample_fn, static_argnames=())
+        self.stats = {"arrived": 0, "sampled": 0}
+
+    def _sample_fn(self, key, strata, meta_w, meta_c):
+        m = strata.shape[0]
+        batch = IntervalBatch(
+            value=jnp.zeros((m,), jnp.float32),
+            stratum=strata,
+            valid=jnp.ones((m,), bool),
+            meta=StratumMeta(meta_w, meta_c),
+        )
+        size = jnp.float32(self.cfg.sampling_fraction * m)
+        res = whs.whsamp(key, batch, size, self.cfg.num_strata,
+                         allocation=self.cfg.allocation)
+        return res.selected, res.meta.weight
+
+    def next_batch(self) -> dict:
+        cfg = self.cfg
+        ex = self.stream.examples(cfg.interval_size)
+        self._key, sub = jax.random.split(self._key)
+        sel, w = self._sample(sub, jnp.asarray(ex["stratum"]),
+                              jnp.ones((cfg.num_strata,), jnp.float32),
+                              jnp.zeros((cfg.num_strata,), jnp.float32))
+        sel = np.asarray(sel)
+        w = np.asarray(w)
+        idx = np.nonzero(sel)[0]
+        self.stats["arrived"] += cfg.interval_size
+        self.stats["sampled"] += len(idx)
+        # pack into a fixed batch (repeat-pad if the sample is short; the
+        # pad examples keep their true weights so the estimate stays valid)
+        if len(idx) == 0:
+            idx = np.arange(min(cfg.batch_size, cfg.interval_size))
+            w = np.ones((cfg.num_strata,), np.float32)
+        take = np.resize(idx, cfg.batch_size)
+        dup = np.bincount(take, minlength=cfg.interval_size).astype(np.float32)
+        strat = ex["stratum"][take]
+        weight = w[strat] / dup[take]       # split weight across duplicates
+        return {
+            "tokens": ex["tokens"][take],
+            "labels": ex["labels"][take],
+            "stratum": strat,
+            "weight": weight.astype(np.float32),
+        }

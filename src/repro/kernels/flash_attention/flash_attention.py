@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+Tiling: grid = (B·Hq, S/bq, S/bk); the kv loop is the innermost grid axis
+so the (m, l, acc) running state lives in VMEM scratch across steps.
+Block sizes default to 128×128 — MXU-aligned on both matmul dims — with
+the full head_dim kept resident (≤128 for every assigned arch). VMEM
+footprint per step ≈ (bq + 2·bk)·D·2B + bq·bk·4B ≈ 160 KiB ≪ 16 MiB, so
+the compiler can double-buffer the k/v streams.
+
+Causal blocks strictly above the diagonal are skipped with ``pl.when``
+(predicated-off, no MXU issue), halving compute vs. a masked dense pass.
+GQA is handled in the BlockSpec index map: the kv block fetched for
+q-head ``h`` is head ``h // (Hq/Hkv)`` — no ``jnp.repeat`` materialization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale, block_q, block_k):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(kj <= qi)  # causal: skip blocks entirely above the diagonal
+    def _step():
+        q = q_ref[0, :, :]                       # [bq, D]
+        k = k_ref[0, :, :]                       # [bk, D]
+        v = v_ref[0, :, :]                       # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                 # [bq, bk]
+
+        # Diagonal block: apply the triangular mask in-register.
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where((kj < qi) | (rows >= cols), s, _NEG_INF)
+
+        m_prev = m_scr[...]                      # [bq, 1]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)                   # [bq, bk]
+        alpha = jnp.exp(m_prev - m_cur)          # [bq, 1]
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0, :, :] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, S, D]
+    v: jnp.ndarray,  # [B, Hkv, S, D]
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, "seq must tile evenly"
+
+    qf = q.reshape(b * hq, s, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+
+    # bh = b_ix·Hq + h_ix  →  kv row = b_ix·Hkv + h_ix // group
+    def kv_index(bh, qi, kj):
+        return ((bh // hq) * hkv + (bh % hq) // group, kj, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_q=block_q, block_k=block_k),
+        grid=(b * hq, s // block_q, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,31 @@
+"""Public op: attention with kernel/oracle/XLA dispatch.
+
+``impl``:
+    "xla"    — einsum reference path (default for dry-run lowering: XLA's
+               cost model counts its FLOPs, Pallas custom-calls are opaque
+               to ``cost_analysis``; the roofline harness adds kernel FLOPs
+               analytically when the pallas path is selected).
+    "pallas" — the flash kernel (interpret=True off-TPU).
+    "ref"    — alias of "xla".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention as _flash
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl"))
+def attention(q, k, v, *, causal: bool = True, impl: str = "xla"):
+    if impl == "pallas":
+        assert causal, "flash kernel is causal-only"
+        return _flash(q, k, v, interpret=not _on_tpu())
+    return ref.attention(q, k, v, causal=causal)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: causal GQA attention (materializes the S×S matrix)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, S, D]
+    v: jnp.ndarray,  # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kx).astype(jnp.float32) / jnp.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vx)

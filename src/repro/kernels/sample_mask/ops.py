@@ -1,0 +1,57 @@
+"""Public op: threshold-based selection (kernel/oracle dispatch) and the
+exact per-stratum threshold computation that feeds it.
+
+``thresholds_from_reservoirs`` reproduces the priority sampler exactly:
+τ_i = the ``N_i``-th largest priority among stratum-i valid items (−∞ when
+``c_i ≤ N_i``), so ``keep = u ≥ τ`` selects precisely the per-stratum
+top-``N_i`` — the reservoir-sampling output law.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sample_mask import ref
+from repro.kernels.sample_mask.sample_mask import sample_mask as _pallas_mask
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_strata",))
+def thresholds_from_reservoirs(
+    priorities: jnp.ndarray,
+    strata: jnp.ndarray,
+    valid: jnp.ndarray,
+    reservoirs: jnp.ndarray,
+    num_strata: int,
+) -> jnp.ndarray:
+    """Exact τ[X]: N_i-th largest valid priority per stratum (−inf if c≤N)."""
+    m = priorities.shape[0]
+    seg = jnp.where(valid, strata, num_strata).astype(jnp.float32)
+    sort_key = seg * 2.0 + (1.0 - jnp.where(valid, priorities, -0.5))
+    order = jnp.argsort(sort_key)
+    seg_sorted = jnp.where(valid, strata, num_strata)[order]
+    counts = jnp.zeros((num_strata + 2,), jnp.int32).at[
+        jnp.where(valid, strata, num_strata)
+    ].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    n_int = reservoirs.astype(jnp.int32)
+    c_int = counts[:num_strata]
+    # Index of the N_i-th largest element of stratum i in sorted order.
+    idx = starts[:num_strata] + jnp.clip(n_int - 1, 0, jnp.maximum(c_int - 1, 0))
+    tau = priorities[order][jnp.clip(idx, 0, m - 1)]
+    # keep-everything sentinel is -1.0 (priorities ∈ [0,1)): finite, so the
+    # kernel's one-hot·τ matmul stays NaN-free (0·(−inf) would poison it).
+    return jnp.where(c_int > n_int, tau, -1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def sample_mask(priorities, strata, valid, tau, weights, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _pallas_mask(priorities, strata, valid, tau, weights,
+                            interpret=not _on_tpu())
+    return ref.sample_mask(priorities, strata, valid, tau, weights)

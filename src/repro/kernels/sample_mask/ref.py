@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused sample-mask kernel.
+
+Given per-item priorities and per-stratum selection thresholds τ (the
+``N_i``-th largest priority within the stratum, +∞ if the stratum keeps
+everything), emit the selection mask and the per-item effective weight in
+one pass:
+
+    keep_k   = valid_k ∧ (u_k ≥ τ[s_k])
+    weight_k = keep_k ? W^out[s_k] : 0
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sample_mask(
+    priorities: jnp.ndarray,  # f32[M]
+    strata: jnp.ndarray,      # i32[M]
+    valid: jnp.ndarray,       # bool[M]
+    tau: jnp.ndarray,         # f32[X] selection threshold per stratum
+    weights: jnp.ndarray,     # f32[X] W^out per stratum
+):
+    keep = valid & (priorities >= tau[strata])
+    w = jnp.where(keep, weights[strata], 0.0)
+    return keep, w

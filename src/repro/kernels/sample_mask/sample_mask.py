@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused threshold-select + weight materialization.
+
+Second stage of the TPU-native reservoir sampler: stage 1 (tiny, XLA sort
+over per-stratum priorities) finds each stratum's ``N_i``-th largest
+priority τ_i; this kernel then streams the item buffer once, emitting the
+keep-mask and per-item weight. Lookup tables (τ, W) are broadcast to every
+grid step and resolved with a one-hot MXU matmul instead of a dynamic
+gather — gathers are VPU-serial on TPU, one-hot matmuls are not.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BLOCK_ITEMS = 4096
+
+
+def _kernel(prio_ref, strata_ref, valid_ref, tau_ref, w_ref, keep_ref, wout_ref,
+            *, num_strata: int):
+    u = prio_ref[0, :]
+    s = strata_ref[0, :]
+    m = valid_ref[0, :]
+
+    b = u.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, num_strata), 1)
+    onehot = (s[:, None] == cols).astype(jnp.float32)          # [B, X]
+    tau_i = onehot @ tau_ref[0, :]                              # [B]
+    w_i = onehot @ w_ref[0, :]                                  # [B]
+
+    keep = m & (u >= tau_i)
+    keep_ref[0, :] = keep
+    wout_ref[0, :] = jnp.where(keep, w_i, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sample_mask(
+    priorities: jnp.ndarray,
+    strata: jnp.ndarray,
+    valid: jnp.ndarray,
+    tau: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    interpret: bool = True,
+):
+    m_items = priorities.shape[0]
+    num_strata = tau.shape[0]
+    block = min(_BLOCK_ITEMS, m_items)
+    pad = (-m_items) % block
+    if pad:
+        priorities = jnp.pad(priorities, (0, pad))
+        strata = jnp.pad(strata, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    n = priorities.shape[0] // block
+
+    keep, w = pl.pallas_call(
+        functools.partial(_kernel, num_strata=num_strata),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_strata), lambda i: (0, 0)),
+            pl.BlockSpec((1, num_strata), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, block), jnp.bool_),
+            jax.ShapeDtypeStruct((n, block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        priorities.reshape(n, block),
+        strata.reshape(n, block),
+        valid.reshape(n, block),
+        tau.reshape(1, num_strata),
+        weights.reshape(1, num_strata),
+    )
+    return keep.reshape(-1)[:m_items], w.reshape(-1)[:m_items]

@@ -1,0 +1,36 @@
+"""Public op: stratified_stats with kernel/oracle dispatch.
+
+On TPU the Pallas kernel runs compiled (``interpret=False``); everywhere
+else it runs in interpret mode (bit-accurate kernel-body semantics on CPU)
+or falls back to the jnp oracle for speed. The boundary is one function so
+callers never see the backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.stratified_stats import ref
+from repro.kernels.stratified_stats.stratified_stats import (
+    stratified_stats as _pallas_stats,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_strata", "impl"))
+def stratified_stats(
+    values: jnp.ndarray,
+    strata: jnp.ndarray,
+    mask: jnp.ndarray,
+    num_strata: int,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Fused per-stratum (count, Σx, Σx²). impl ∈ {auto, pallas, ref}."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _pallas_stats(values, strata, mask, num_strata, interpret=not _on_tpu())
+    return ref.stratified_stats(values, strata, mask, num_strata)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused stratified-stats kernel.
+
+Per stratum over *selected* items: (count, Σx, Σx²). These three moments
+are everything the root node needs for every linear query + its CLT error
+bound (§III-D), so fusing them into one HBM pass is the analytics plane's
+hot spot.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stratified_stats(
+    values: jnp.ndarray,   # f32[M]
+    strata: jnp.ndarray,   # i32[M]
+    mask: jnp.ndarray,     # bool[M]  (selected & valid)
+    num_strata: int,
+) -> jnp.ndarray:          # f32[X, 3] = (count, sum, sumsq)
+    seg = jnp.where(mask, strata, num_strata)
+    z = jnp.zeros((num_strata + 1,), jnp.float32)
+    cnt = z.at[seg].add(1.0)[:num_strata]
+    s1 = z.at[seg].add(jnp.where(mask, values, 0.0))[:num_strata]
+    s2 = z.at[seg].add(jnp.where(mask, values * values, 0.0))[:num_strata]
+    return jnp.stack([cnt, s1, s2], axis=-1)

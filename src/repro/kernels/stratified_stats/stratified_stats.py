@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused per-stratum (count, Σx, Σx²) in one HBM pass.
+
+TPU adaptation of the paper's per-stratum aggregation loops: instead of a
+scatter per item (serial, VPU-hostile), each VMEM tile of items builds a
+one-hot [block, X] stratum matrix and hits the MXU once:
+
+    stats[X, 3] += one_hot(strata_tile)ᵀ @ [mask, x·mask, x²·mask]
+
+The grid walks item tiles sequentially (TPU grid order), accumulating into
+the same output block — the standard revisiting-output reduction pattern.
+Arithmetic intensity: 6·X FLOPs per 4-byte item vs. 3 scalar scatters; the
+pass is memory-bound, so one fused pass ≈ 3× fewer HBM bytes than three
+separate segment-sums.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Item tile: (8, 128) f32 = one native VREG tile per load; 4 tiles deep to
+# amortize grid overhead → 4096 items per grid step, 16 KiB of values in VMEM.
+_BLOCK_ITEMS = 4096
+
+
+def _kernel(values_ref, strata_ref, mask_ref, out_ref, *, num_strata: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = values_ref[0, :]                                  # f32[B]
+    s = strata_ref[0, :]                                  # i32[B]
+    m = mask_ref[0, :].astype(jnp.float32)                # f32[B]
+
+    b = v.shape[0]
+    # one_hot[B, X] — broadcasted iota keeps it 2D (TPU requires ≥2D iota).
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, num_strata), 1)
+    onehot = jnp.where(s[:, None] == cols, m[:, None], 0.0)
+
+    feats = jnp.stack([m, v * m, v * v * m], axis=-1)     # f32[B, 3]
+    # [X, B] @ [B, 3] on the MXU.
+    tile = jax.lax.dot_general(
+        onehot, feats, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] += tile
+
+
+@functools.partial(jax.jit, static_argnames=("num_strata", "interpret"))
+def stratified_stats(
+    values: jnp.ndarray,
+    strata: jnp.ndarray,
+    mask: jnp.ndarray,
+    num_strata: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """f32[X, 3] per-stratum (count, Σx, Σx²) over masked items."""
+    m_items = values.shape[0]
+    block = min(_BLOCK_ITEMS, m_items)
+    pad = (-m_items) % block
+    if pad:
+        values = jnp.pad(values, (0, pad))
+        strata = jnp.pad(strata, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    n = values.shape[0] // block
+    v2 = values.reshape(n, block)
+    s2 = strata.reshape(n, block)
+    k2 = mask.reshape(n, block)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, num_strata=num_strata),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_strata, 3), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_strata, 3), jnp.float32),
+        interpret=interpret,
+    )(v2, s2, k2)

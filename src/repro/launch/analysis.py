@@ -1,0 +1,75 @@
+"""Compiled-artifact analysis → roofline terms (EXPERIMENTS.md §Roofline).
+
+Two cost sources:
+  * ``compiled.cost_analysis()`` (XLA) — reported for reference, but it
+    counts every ``while`` body once, so scan-over-layers models are
+    under-counted by ~L×;
+  * ``launch.hlocost`` — text-level model over the partitioned HLO that
+    multiplies by ``known_trip_count`` (validated against XLA on
+    loop-free modules). The roofline terms use this one.
+
+Terms (per-device: partitioned-module shapes are per-chip already):
+    compute_s    = flops / PEAK_FLOPS
+    memory_s     = bytes / HBM_BW
+    collective_s = collective_operand_bytes / ICI_BW
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.launch import hlocost
+
+# TPU v5e-class hardware constants (per chip).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float) -> dict:
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_ / HBM_BW,
+        "collective_s": coll_bytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = terms["compute_s"] / bound if bound > 0 else 0.0
+    return dict(terms, dominant=dominant, step_s=bound, compute_fraction=frac)
+
+
+def summarize(compiled, *, chips: int, extra_flops_per_chip: float = 0.0,
+              flash_seq: int | None = None) -> dict[str, Any]:
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+
+    hlo = compiled.as_text()
+    model = hlocost.analyze_text(hlo, zero_s2_seq=flash_seq)
+    flops = model["flops"] + extra_flops_per_chip
+    bytes_ = model["bytes"]
+    coll_bytes = model["collective_bytes"]
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        }
+    except Exception as e:  # backend may not implement it
+        mem_rec = {"error": str(e)}
+
+    return {
+        "flops_per_chip": flops,
+        "dot_flops_per_chip": model["dot_flops"],
+        "bytes_per_chip": bytes_,
+        "collective_bytes_per_chip": coll_bytes,
+        "collectives": model["collectives"],
+        "xla_cost_flops": float(xla_cost.get("flops", 0.0)),
+        "xla_bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+        "memory": mem_rec,
+        **{"terms": roofline_terms(flops, bytes_, coll_bytes)},
+        "hlo_size": len(hlo),
+    }

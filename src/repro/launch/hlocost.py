@@ -1,0 +1,395 @@
+"""Text-level cost model over post-SPMD-partitioned HLO.
+
+Why: XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE,
+so a scan-over-layers transformer reports ~1/L of its true FLOPs, and
+collectives inside the scan (the FSDP all-gathers!) are similarly
+under-counted. This module re-derives cost from ``compiled.as_text()``:
+
+  * parses every computation, builds the call graph
+    (entry → while bodies → fusions → …),
+  * multiplies by ``known_trip_count`` at each ``while``,
+  * FLOPs: dots = 2·numel(result)·contract_size; elementwise = numel;
+    reduce = numel(operand); data movement = 0,
+  * bytes: operands+result of every scheduled op outside fusion bodies
+    (XLA "bytes accessed" semantics),
+  * collectives: operand bytes × loop multiplier, per kind.
+
+Shapes in the partitioned module are per-device, so all outputs are
+per-chip. Validated against ``cost_analysis()`` on loop-free modules
+(tests/test_hlocost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1, "token": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "compare", "select", "and",
+    "or", "xor", "not", "clamp", "sine", "cosine", "tan", "atan2", "erf",
+    "logistic", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "rng", "rng-bit-generator", "map",
+}
+_DATA_MOVE = {
+    "broadcast", "reshape", "transpose", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "gather", "scatter", "copy",
+    "pad", "reverse", "convert", "bitcast", "bitcast-convert", "iota",
+    "reduce", "reduce-window", "sort", "dot", "fusion", "select-and-scatter",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "custom-call", "convolution", "cholesky",
+    "triangular-solve", "fft",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "token", "while", "conditional",
+               "call", "partition-id", "replica-id", "domain", "opt-barrier"}
+
+
+def _shapes_bytes(text: str) -> float:
+    return float(sum(
+        _DTYPE_BYTES.get(d, 0) * _numel(dims) for d, dims in _SHAPE_RE.findall(text)
+    ))
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _result_numel(rtype: str) -> int:
+    return sum(_numel(dims) for _, dims in _SHAPE_RE.findall(rtype))
+
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rtype: str
+    opcode: str
+    rest: str            # operand list + attributes (rest of line)
+
+    def operands_text(self) -> str:
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return self.rest[:i]
+        return self.rest
+
+    def operand_names(self) -> list[str]:
+        return _NAME_RE.findall(self.operands_text())
+
+    def attr(self, key: str) -> str | None:
+        m = re.search(key + r"=%([\w.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+
+def parse_module(text: str) -> tuple[dict[str, list[Op]], str]:
+    comps: dict[str, list[Op]] = {}
+    entry = ""
+    cur: list[Op] | None = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = comps.setdefault(m.group(1), [])
+                if line.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.append(Op(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps, entry
+
+
+class HloCost:
+    """``zero_s2_seq``: flash-kernel repricing. When set to the sequence
+    length S, any shape whose last dim == S and second-to-last dim ≥ S/64
+    (the attention-score S×S tiles, under any context/head partitioning)
+    contributes 0 bytes — on TPU the validated Pallas flash kernel streams
+    those tiles through VMEM and they never touch HBM. FLOPs are NOT
+    repriced (the kernel still does the math), so the resulting byte
+    profile is exactly q/k/v reads + output writes."""
+
+    def __init__(self, text: str, zero_s2_seq: int | None = None):
+        self.zero_s2_seq = zero_s2_seq
+        self.comps, self.entry = parse_module(text)
+        self._memo: dict[tuple[str, bool], dict] = {}
+        # Scheduled HLO prints operands without types — resolve shapes via
+        # a per-computation def-use table (SSA names are computation-local).
+        self._types: dict[str, dict[str, str]] = {
+            cname: {op.name: op.rtype for op in ops}
+            for cname, ops in self.comps.items()
+        }
+
+    # ------------------------------------------------------------------
+    def _bytes_of(self, text: str) -> float:
+        """Bytes of all shapes in ``text``, with flash S² repricing."""
+        s2 = self.zero_s2_seq
+        total = 0.0
+        for d, dims_s in _SHAPE_RE.findall(text):
+            dims = [int(x) for x in dims_s.split(",") if x]
+            if (s2 and len(dims) >= 2 and dims[-1] == s2
+                    and dims[-2] >= max(s2 // 64, 2)):
+                continue
+            n = 1
+            for x in dims:
+                n *= x
+            total += _DTYPE_BYTES.get(d, 0) * n
+        return float(total)
+
+    def _operand_types(self, comp: str, op: Op) -> list[str]:
+        table = self._types.get(comp, {})
+        out = [table.get(n, "") for n in op.operand_names()]
+        # unscheduled modules may inline types in the operand list
+        if not any(out) and _SHAPE_RE.search(op.operands_text()):
+            return [op.operands_text()]
+        return out
+
+    def _operand_bytes(self, comp: str, op: Op) -> float:
+        return sum(self._bytes_of(t) for t in self._operand_types(comp, op))
+
+    def _op_flops(self, comp: str, op: Op) -> float:
+        oc = op.opcode
+        if oc == "dot":
+            types = self._operand_types(comp, op)
+            lhs = _SHAPE_RE.search(types[0]) if types else None
+            if not lhs:
+                return 0.0
+            ldims = [int(x) for x in lhs.group(2).split(",") if x]
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+            contract = 1
+            if m:
+                for ix in m.group(1).split(","):
+                    if ix:
+                        contract *= ldims[int(ix)]
+            return 2.0 * _result_numel(op.rtype) * contract
+        if oc == "convolution":
+            types = self._operand_types(comp, op)
+            k = 1
+            if len(types) > 1:
+                m = _SHAPE_RE.search(types[1])
+                if m:
+                    k = _numel(m.group(2))
+            return 2.0 * _result_numel(op.rtype) * max(k, 1)
+        if oc in _ELEMENTWISE:
+            return float(_result_numel(op.rtype))
+        if oc in ("reduce", "reduce-window", "all-reduce", "all-reduce-start",
+                  "reduce-scatter", "select-and-scatter"):
+            types = self._operand_types(comp, op)
+            m = _SHAPE_RE.search(types[0]) if types else None
+            return float(_numel(m.group(2))) if m else 0.0
+        return 0.0
+
+    def _op_bytes(self, comp: str, op: Op) -> float:
+        if op.opcode in _SKIP_BYTES:
+            return 0.0
+        if op.opcode in ("slice", "dynamic-slice", "gather"):
+            # XLA cost semantics: a slice/gather touches the *extracted*
+            # region (read) + result (write), not the whole source buffer.
+            return 2.0 * self._bytes_of(op.rtype)
+        if op.opcode == "dynamic-update-slice":
+            # read + write of the update region only; the big buffer is
+            # aliased through untouched.
+            types = self._operand_types(comp, op)
+            upd = self._bytes_of(types[1]) if len(types) > 1 else 0.0
+            return 2.0 * upd
+        if op.opcode in _ELEMENTWISE or op.opcode in _DATA_MOVE:
+            return self._operand_bytes(comp, op) + self._bytes_of(op.rtype)
+        return 0.0
+
+    # Fusion byte model (mirrors HloCostAnalysis utilization semantics):
+    # a fusion parameter consumed ONLY by slice/dynamic-slice/gather inside
+    # the fusion contributes the sliced bytes, not the full buffer; a
+    # parameter that is only the in-place target of a root dynamic-update-
+    # slice contributes the update-region bytes; everything else reads
+    # fully. The result side likewise: a DUS root writes its update region.
+    # ``bitcast``/``copy``/``convert`` are pass-throughs for consumption
+    # classification: the CPU host backend emulates bf16 by widening whole
+    # buffers to f32 around in-place updates (convert → DUS → convert),
+    # which a TPU compile performs as a single in-place bf16 DUS — counting
+    # the widening converts would charge the full buffer per loop trip.
+    _SLICE_LIKE = ("slice", "dynamic-slice", "gather")
+    _TRANSPARENT = ("bitcast", "copy", "convert")
+
+    def _fusion_bytes(self, comp: str, op: Op, called: str | None) -> float:
+        full = self._operand_bytes(comp, op) + self._bytes_of(op.rtype)
+        ops = self.comps.get(called or "", [])
+        if not ops:
+            return full
+        # Pure dtype-cast fusions (convert/bitcast only) are free on TPU:
+        # XLA fuses the cast into the producing/consuming op's register
+        # stream. The CPU host backend materializes them because it
+        # emulates bf16 in f32 — charging them would double-count the
+        # neighbouring op's traffic.
+        if all(o.opcode in ("parameter", "convert", "bitcast") for o in ops):
+            return 0.0
+        types = self._types.get(called, {})
+        consumers: dict[str, list[Op]] = {}
+        for o in ops:
+            if o.opcode == "parameter":
+                continue
+            for nm in o.operand_names():
+                consumers.setdefault(nm, []).append(o)
+
+        def resolved_consumers(name: str, depth: int = 0) -> list[tuple[Op, str]]:
+            """(consumer, consumed-as-name) pairs, looking through bitcasts."""
+            out = []
+            for c in consumers.get(name, []):
+                if c.opcode in self._TRANSPARENT and depth < 8:
+                    out.extend(resolved_consumers(c.name, depth + 1))
+                else:
+                    out.append((c, name))
+            return out
+
+        read = 0.0
+        for p in (o for o in ops if o.opcode == "parameter"):
+            cons = resolved_consumers(p.name)
+            if cons and all(c.opcode in self._SLICE_LIKE for c, _ in cons):
+                read += sum(self._bytes_of(c.rtype) for c, _ in cons)
+            elif cons and all(
+                c.opcode == "dynamic-update-slice"
+                and c.operand_names()[:1] == [nm] for c, nm in cons
+            ):
+                for c, _ in cons:
+                    onames = c.operand_names()
+                    upd_t = types.get(onames[1], "") if len(onames) > 1 else ""
+                    read += self._bytes_of(upd_t)
+            else:
+                read += self._bytes_of(p.rtype)
+
+        def resolve_root(o: Op, depth: int = 0) -> Op:
+            if o.opcode in self._TRANSPARENT and depth < 8:
+                src = o.operand_names()
+                tgt = next((x for x in ops if x.name == src[0]), None) if src else None
+                if tgt is not None:
+                    return resolve_root(tgt, depth + 1)
+            return o
+
+        root = resolve_root(ops[-1])
+        if root.opcode == "dynamic-update-slice":
+            onames = root.operand_names()
+            upd_t = types.get(onames[1], "") if len(onames) > 1 else ""
+            write = self._bytes_of(upd_t)
+        else:
+            write = self._bytes_of(op.rtype)
+        return read + write
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, name: str, inside_fusion: bool = False) -> dict:
+        key = (name, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = {"flops": 0.0, "bytes": 0.0, "coll": {}, "dot_flops": 0.0}
+        for op in self.comps.get(name, []):
+            oc = op.opcode
+            if oc == "fusion":
+                called = op.attr("calls")
+                if called:
+                    sub = self.comp_cost(called, True)
+                    total["flops"] += sub["flops"]
+                    total["dot_flops"] += sub["dot_flops"]
+                    _merge_coll(total["coll"], sub["coll"], 1.0)
+                if not inside_fusion:
+                    total["bytes"] += self._fusion_bytes(name, op, called)
+                continue
+            if oc == "while":
+                body = op.attr("body")
+                cond = op.attr("condition")
+                trip = 1.0
+                m = _TRIP_RE.search(op.rest)
+                if m:
+                    trip = float(m.group(1))
+                for sub_name in (body, cond):
+                    if sub_name:
+                        sub = self.comp_cost(sub_name, inside_fusion)
+                        total["flops"] += trip * sub["flops"]
+                        total["dot_flops"] += trip * sub["dot_flops"]
+                        total["bytes"] += trip * sub["bytes"]
+                        _merge_coll(total["coll"], sub["coll"], trip)
+                continue
+            if oc in ("call", "async-start"):
+                called = op.attr("to_apply") or op.attr("called_computation")
+                if called:
+                    sub = self.comp_cost(called, inside_fusion)
+                    for k in ("flops", "dot_flops", "bytes"):
+                        total[k] += sub[k]
+                    _merge_coll(total["coll"], sub["coll"], 1.0)
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", op.rest)
+                names = re.findall(r"%([\w.\-]+)", branches[0]) if branches else []
+                for b in (op.attr("true_computation"), op.attr("false_computation")):
+                    if b:
+                        names.append(b)
+                subs = [self.comp_cost(b, inside_fusion) for b in names]
+                if subs:
+                    big = max(subs, key=lambda s: s["flops"])
+                    for k in ("flops", "dot_flops", "bytes"):
+                        total[k] += big[k]
+                    _merge_coll(total["coll"], big["coll"], 1.0)
+                continue
+
+            f = self._op_flops(name, op)
+            total["flops"] += f
+            if oc == "dot":
+                total["dot_flops"] += f
+            if not inside_fusion:
+                total["bytes"] += self._op_bytes(name, op)
+            base = oc.removesuffix("-start")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                nbytes = self._operand_bytes(name, op)
+                rec = total["coll"].setdefault(base, {"count": 0.0, "bytes": 0.0})
+                rec["count"] += 1
+                rec["bytes"] += nbytes
+        self._memo[key] = total
+        return total
+
+    def totals(self) -> dict:
+        t = self.comp_cost(self.entry)
+        coll_bytes = sum(v["bytes"] for v in t["coll"].values())
+        return {
+            "flops": t["flops"], "dot_flops": t["dot_flops"],
+            "bytes": t["bytes"], "collectives": t["coll"],
+            "collective_bytes": coll_bytes,
+        }
+
+
+def _merge_coll(dst: dict, src: dict, mult: float) -> None:
+    for k, v in src.items():
+        rec = dst.setdefault(k, {"count": 0.0, "bytes": 0.0})
+        rec["count"] += v["count"] * mult
+        rec["bytes"] += v["bytes"] * mult
+
+
+def analyze_text(text: str, zero_s2_seq: int | None = None) -> dict:
+    return HloCost(text, zero_s2_seq=zero_s2_seq).totals()

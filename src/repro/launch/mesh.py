@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The single-pod mesh is 16×16 = 256 chips ("data", "model"); the
+multi-pod mesh adds a leading "pod" axis → 2×16×16 = 512 chips. The
+"pod" axis participates in batch DP and ZeRO weight sharding (DCI-friendly
+collectives only: gradient all-reduce + param all-gather).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has — smoke tests / examples (usually 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,270 @@
+"""Functional layer library (no framework deps): norms, RoPE, GQA
+attention (full-sequence train path + single-token decode path), MLPs,
+embeddings. Params are plain nested dicts of jnp arrays; every function is
+pure. Activation shardings use logical axes via ``launch.meshctx.shard``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import shard
+
+Params = dict
+
+
+# ----------------------------------------------------------------- norms --
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparametric_ln(_: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """OLMo: LayerNorm without learnable scale/bias [arXiv:2402.00838]."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+
+
+NORM_INIT = {"rmsnorm": rmsnorm_init, "layernorm": layernorm_init,
+             "nonparametric_ln": lambda d, dt: {}}
+NORM_APPLY = {"rmsnorm": rmsnorm, "layernorm": layernorm,
+              "nonparametric_ln": nonparametric_ln}
+
+
+# ------------------------------------------------------------------ rope --
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention --
+def attention_init(key, cfg, dtype) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, hkv * hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, hkv * hd), dtype) * s,
+        "wo": jax.random.normal(k4, (h * hd, d), dtype) * (h * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def attention(
+    p: Params,
+    cfg,
+    x: jnp.ndarray,                     # [B, S, d]
+    positions: jnp.ndarray,             # [B, S]
+    *,
+    causal: bool = True,
+    kv_x: jnp.ndarray | None = None,    # cross-attention source
+    attn_impl: str = "xla",
+) -> jnp.ndarray:
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = _split_heads(x @ p["wq"], h, hd)
+    k = _split_heads(src @ p["wk"], hkv, hd)
+    v = _split_heads(src @ p["wv"], hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if kv_x is None and cfg.rope_theta > 0:
+        q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+
+    if attn_impl == "pallas" and causal and kv_x is None:
+        from repro.kernels.flash_attention.ops import attention as flash
+        o = flash(q, k, v, causal=True, impl="pallas")
+        b, _, s, _ = o.shape
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    else:
+        # TP strategy is mesh-aware:
+        #   * kv heads divide the model axis → GQA-native grouped einsum,
+        #     heads sharded, no head-repeated K/V materialization;
+        #   * otherwise → head-repeated layout with (unevenly padded) head
+        #     sharding — XLA's partial head sharding beats both full
+        #     replication and context-parallel resharding here (measured:
+        #     CP forces partial-contract projections + full-size
+        #     all-reduces; see EXPERIMENTS.md §Perf iteration A2).
+        # Both paths keep operands in bf16 with f32 accumulation.
+        from repro.launch.meshctx import current_mesh
+        mesh = current_mesh()
+        n_model = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+        group = h // hkv
+        b, _, sq_len, _ = q.shape
+        if hkv % max(n_model, 1) == 0:
+            qg = q.reshape(b, hkv, group, sq_len, hd)
+            qg = shard(qg, "batch", "model", None, None, None)
+            k = shard(k, "batch", "model", None, None)
+            v = shard(v, "batch", "model", None, None)
+            logits = jnp.einsum("bkgqd,bkld->bkgql", qg, k,
+                                preferred_element_type=jnp.float32) / (hd ** 0.5)
+            if causal:
+                sq, sk = logits.shape[-2], logits.shape[-1]
+                mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+                logits = jnp.where(mask, logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+            o = jnp.einsum("bkgql,bkld->bkgqd", probs, v,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            o = o.transpose(0, 3, 1, 2, 4).reshape(b, sq_len, h * hd)
+        else:
+            kx = jnp.repeat(k, group, axis=1)
+            vx = jnp.repeat(v, group, axis=1)
+            q = shard(q, "batch", "model", None, None)
+            kx = shard(kx, "batch", "model", None, None)
+            vx = shard(vx, "batch", "model", None, None)
+            logits = jnp.einsum("bhqd,bhkd->bhqk", q, kx,
+                                preferred_element_type=jnp.float32) / (hd ** 0.5)
+            if causal:
+                sq, sk = logits.shape[-2], logits.shape[-1]
+                mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+                logits = jnp.where(mask, logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+            o = jnp.einsum("bhqk,bhkd->bhqd", probs, vx,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+            o = o.transpose(0, 2, 1, 3).reshape(b, sq_len, h * hd)
+    return o @ p["wo"]   # see swiglu: block-boundary SP constraint → RS
+
+
+def attention_decode(
+    p: Params,
+    cfg,
+    x: jnp.ndarray,           # [B, 1, d]
+    k_cache: jnp.ndarray,     # [B, Hkv, S, hd]
+    v_cache: jnp.ndarray,     # [B, Hkv, S, hd]
+    pos: jnp.ndarray,         # scalar: index of the new token
+    *,
+    update_cache: bool = True,
+    cross: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a KV cache; returns (out, k_cache, v_cache)."""
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    q = _split_heads(x @ p["wq"], h, hd)                   # [B, H, 1, hd]
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+    if not cross and cfg.rope_theta > 0:
+        q = apply_rope(q, jnp.full((b, 1, 1), pos, jnp.int32)[:, 0, :][:, None, :], cfg.rope_theta)
+
+    if update_cache and not cross:
+        k_new = _split_heads(x @ p["wk"], hkv, hd)         # [B, Hkv, 1, hd]
+        v_new = _split_heads(x @ p["wv"], hkv, hd)
+        if cfg.qk_norm:
+            k_new = rmsnorm(p["k_norm"], k_new)
+        if cfg.rope_theta > 0:
+            k_new = apply_rope(k_new, jnp.full((b, 1, 1), pos, jnp.int32)[:, 0, :][:, None, :],
+                               cfg.rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype),
+                                               (0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype),
+                                               (0, 0, pos, 0))
+
+    # GQA-native grouped attention: never materialize the head-repeated
+    # cache (group× bytes) and read K/V in their storage dtype with f32
+    # accumulation (the MXU accumulates f32 natively — casting operands
+    # up-front would double the HBM read).
+    group = h // hkv
+    s_cache = k_cache.shape[2]
+    qg = q.reshape(b, hkv, group, hd)                      # [B, Hkv, G, hd]
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    valid = jnp.arange(s_cache) <= pos if not cross else jnp.ones((s_cache,), bool)
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", probs.astype(k_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(b, 1, h * hd)
+    return o @ p["wo"], k_cache, v_cache
+
+
+# ------------------------------------------------------------------ mlps --
+def swiglu_init(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d, d_ff), dtype) * d ** -0.5,
+        "w_up": jax.random.normal(k2, (d, d_ff), dtype) * d ** -0.5,
+        "w_down": jax.random.normal(k3, (d_ff, d), dtype) * d_ff ** -0.5,
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", None, "model")
+    # No output constraint: the sequence-parallel residual constraint at
+    # the block boundary turns the TP partial-sum into a reduce-scatter
+    # (half the bytes of the all-reduce a replicated constraint forces).
+    return h @ p["w_down"]
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": jax.random.normal(k1, (d, d_ff), dtype) * d ** -0.5,
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": jax.random.normal(k2, (d_ff, d), dtype) * d_ff ** -0.5,
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    h = shard(h, "batch", None, "model")
+    return h @ p["w_down"] + p["b_down"]   # see swiglu: SP boundary → RS
+
+
+# ------------------------------------------------------------ embeddings --
+def embedding_init(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return shard(p["table"][tokens], "batch", None, None)
+
+
+def unembed_init(key, d: int, vocab: int, dtype) -> Params:
+    return {"w": jax.random.normal(key, (d, vocab), dtype) * d ** -0.5}
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return shard(x @ p["w"], "batch", None, "model")

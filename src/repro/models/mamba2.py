@@ -1,0 +1,169 @@
+"""Mamba2 (SSD) block — chunked parallel scan for training, O(1)-state
+recurrence for decode. Follows the scalar-A-per-head SSD formulation
+[Dao & Gu 2024], n_groups=1 (B/C shared across heads).
+
+Chunked form (chunk length Q, log-decay l_t = Σ_{τ≤t} log a_τ per head):
+    Y_intra = (C Bᵀ ∘ M) x̃            M_{tτ} = exp(l_t − l_τ), τ ≤ t
+    Y_inter =  C · exp(l_t) · S_prev
+    S_next  =  exp(l_Q)·S_prev + Σ_τ exp(l_Q − l_τ)·B_τ ⊗ x̃_τ
+All decay algebra in fp32 log space; every contraction is an MXU matmul —
+this is the TPU-native replacement for the CUDA selective-scan kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import shard
+
+Params = dict
+
+CONV_WIDTH = 4
+CHUNK = 128
+
+
+def mamba2_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    d_inner = 2 * d
+    n, p_dim = cfg.ssm_state, cfg.ssm_head_dim
+    h = d_inner // p_dim
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        # fused in_proj → [z, x, B, C, dt]
+        "w_in": jax.random.normal(ks[0], (d, 2 * d_inner + 2 * n + h), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (CONV_WIDTH, conv_dim), dtype) * 0.3,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "w_out": jax.random.normal(ks[2], (d_inner, d), dtype) * d_inner ** -0.5,
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner = 2 * cfg.d_model
+    n = cfg.ssm_state
+    h = d_inner // cfg.ssm_head_dim
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * n], axis=-1)
+    return z, xbc, dt  # dt: [..., H]
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv, width 4, over [B, S, conv_dim]."""
+    pads = jnp.pad(xbc, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = sum(
+        pads[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :]
+        for i in range(CONV_WIDTH)
+    )
+    return jax.nn.silu(out + conv_b)
+
+
+def mamba2_forward(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Training path. x: [B, S, d] → [B, S, d]."""
+    b, s, d = x.shape
+    d_inner = 2 * d
+    n, p_dim = cfg.ssm_state, cfg.ssm_head_dim
+    h = d_inner // p_dim
+    q = min(CHUNK, s)
+    assert s % q == 0
+    nc = s // q
+
+    proj = x @ p["w_in"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # [B,S,H]
+    a = -jnp.exp(p["a_log"])                                           # [H] < 0
+    log_decay = (dt * a).astype(jnp.float32)                           # [B,S,H] ≤ 0
+
+    xh = xs.reshape(b, s, h, p_dim)
+    xt = (xh.astype(jnp.float32) * dt[..., None]).astype(jnp.float32)  # dt·x
+    bm = bmat.astype(jnp.float32).reshape(b, nc, q, n)
+    cm = cmat.astype(jnp.float32).reshape(b, nc, q, n)
+    xt = xt.reshape(b, nc, q, h, p_dim)
+    ld = log_decay.reshape(b, nc, q, h)
+
+    def chunk_step(state, inputs):
+        bm_c, cm_c, xt_c, ld_c = inputs            # [B,Q,N],[B,Q,N],[B,Q,H,P],[B,Q,H]
+        l = jnp.cumsum(ld_c, axis=1)               # inclusive  [B,Q,H]
+        l_total = l[:, -1:, :]                     # [B,1,H]
+        # intra-chunk: M_{tτ} = exp(l_t − l_τ) (τ ≤ t)
+        scores = jnp.einsum("bqn,bkn->bqk", cm_c, bm_c)          # [B,Q,Q]
+        gap = l[:, :, None, :] - l[:, None, :, :]                # [B,Q,Q,H]
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        # mask the *argument* (exp(-1e30)=0): masking the result would
+        # backprop 0·inf = NaN through the upper triangle.
+        m = jnp.exp(jnp.where(causal[None, :, :, None], gap, -1e30))
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, m, xt_c)
+        # inter-chunk from carried state [B,H,N,P]
+        y_inter = jnp.einsum("bqn,bqh,bhnp->bqhp", cm_c, jnp.exp(l), state)
+        # state update
+        w_in = jnp.exp(l_total - l)                              # [B,Q,H]
+        ds = jnp.einsum("bqn,bqh,bqhp->bhnp", bm_c, w_in, xt_c)
+        state = jnp.exp(l_total[:, 0, :, None, None].transpose(0, 1, 2, 3)) * state + ds
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((b, h, n, p_dim), jnp.float32)
+    inputs = (
+        bm.transpose(1, 0, 2, 3), cm.transpose(1, 0, 2, 3),
+        xt.transpose(1, 0, 2, 3, 4), ld.transpose(1, 0, 2, 3),
+    )
+    _, ys = jax.lax.scan(chunk_step, state0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p_dim)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+
+    # gated RMSNorm then out-proj
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    return shard((y.astype(x.dtype)) @ p["w_out"], "batch", None, None)
+
+
+def mamba2_init_state(cfg, batch: int, dtype=jnp.float32):
+    d_inner = 2 * cfg.d_model
+    n, p_dim = cfg.ssm_state, cfg.ssm_head_dim
+    h = d_inner // p_dim
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, n, p_dim), jnp.float32),
+    }
+
+
+def mamba2_decode(p: Params, cfg, x: jnp.ndarray, state: dict):
+    """One-token decode. x: [B, 1, d] → ([B, 1, d], new state)."""
+    b = x.shape[0]
+    d = cfg.d_model
+    d_inner = 2 * d
+    n, p_dim = cfg.ssm_state, cfg.ssm_head_dim
+    h = d_inner // p_dim
+
+    proj = x @ p["w_in"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    window = jnp.concatenate([state["conv"], xbc], axis=1)     # [B, W, conv]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    xs, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * a)                                            # [B,H]
+    xh = xs[:, 0].reshape(b, h, p_dim).astype(jnp.float32) * dtv[..., None]
+    ssm = decay[..., None, None] * state["ssm"] + jnp.einsum(
+        "bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), ssm)
+    y = y + xs[:, 0].reshape(b, h, p_dim).astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(b, 1, d_inner)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = y.astype(x.dtype) @ p["w_out"]
+    return out, {"conv": window[:, 1:, :], "ssm": ssm}

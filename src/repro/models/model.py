@@ -1,0 +1,440 @@
+"""Unified model API over all assigned architecture families.
+
+    init_params(cfg, key)                     → params pytree
+    forward(cfg, params, batch)               → (logits, aux_loss)
+    loss_fn(cfg, params, batch)               → (loss, metrics)   [weighted]
+    cache_specs / init_cache(cfg, B, S)       → decode-cache pytree
+    decode_step(cfg, params, cache, tok, pos) → (logits, cache)
+
+Layer stacks are ``lax.scan`` over stacked params (one compiled body per
+family — small HLO, loop-hoisted FSDP collectives). ``cfg.remat`` wraps
+the body in ``jax.checkpoint``. The ApproxIoT data plane enters through
+``loss_fn``: per-example stratum weights from the hierarchical sampler
+make the loss an unbiased *linear query* over the full stream (§DESIGN 3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import shard
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+
+Params = dict
+
+
+# ------------------------------------------------------------------ utils --
+def _stack_init(key, n, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _tree_slice(tree, start: int, length: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0), tree)
+
+
+def _norm(cfg):
+    return L.NORM_APPLY[cfg.norm_type]
+
+
+def _norm_init(cfg, d=None):
+    return L.NORM_INIT[cfg.norm_type](d or cfg.d_model, cfg.param_dtype)
+
+
+def _segments(cfg) -> list[int]:
+    """zamba2: mamba-layer segment lengths between shared-attn applications."""
+    k = cfg.attn_every
+    full, rem = divmod(cfg.num_layers, k)
+    return [k] * full + ([rem] if rem else [])
+
+
+def _sinusoid(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """[..., S] → [..., S, d] sinusoidal embedding (whisper stub pos-enc)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (9.21034 / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat:
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+# ------------------------------------------------------------------- init --
+def init_params(cfg, key) -> Params:
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, 8)
+    p: Params = {"embed": L.embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.unembed_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+    p["final_norm"] = _norm_init(cfg)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": _norm_init(cfg), "attn": L.attention_init(k1, cfg, dt),
+                "ln2": _norm_init(cfg), "mlp": L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dt),
+            }
+        p["layers"] = _stack_init(keys[2], cfg.num_layers, one)
+    elif fam == "moe":
+        def one(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": _norm_init(cfg), "attn": L.attention_init(k1, cfg, dt),
+                "ln2": _norm_init(cfg), "moe": MOE.moe_init(k2, cfg, dt),
+            }
+        p["layers"] = _stack_init(keys[2], cfg.num_layers, one)
+    elif fam == "encdec":
+        def enc_one(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": _norm_init(cfg), "attn": L.attention_init(k1, cfg, dt),
+                "ln2": _norm_init(cfg), "mlp": L.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dt),
+            }
+        def dec_one(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "ln1": _norm_init(cfg), "self_attn": L.attention_init(k1, cfg, dt),
+                "ln_x": _norm_init(cfg), "cross_attn": L.attention_init(k2, cfg, dt),
+                "ln2": _norm_init(cfg), "mlp": L.gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dt),
+            }
+        p["enc_layers"] = _stack_init(keys[2], cfg.encoder_layers, enc_one)
+        p["enc_final_norm"] = _norm_init(cfg)
+        p["layers"] = _stack_init(keys[3], cfg.num_layers, dec_one)
+    elif fam == "hybrid":
+        p["layers"] = _stack_init(keys[2], cfg.num_layers,
+                                  lambda k: {"ln": _norm_init(cfg),
+                                             "mamba": M2.mamba2_init(k, cfg, dt)})
+        p["shared_attn"] = {"ln": _norm_init(cfg),
+                            "attn": L.attention_init(keys[3], cfg, dt)}
+    elif fam == "ssm":
+        p["layers"] = _stack_init(keys[2], cfg.num_layers,
+                                  lambda k: {"ln1": L.layernorm_init(cfg.d_model, dt),
+                                             "tm_cm": R6.rwkv6_init(k, cfg, dt),
+                                             "ln2": L.layernorm_init(cfg.d_model, dt)})
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------- forward --
+def _dense_stack(cfg, stacked, x, positions, *, causal=True, moe=False):
+    norm = _norm(cfg)
+    # Sequence-parallel residual (Megatron-SP): the stream between blocks is
+    # sharded [batch, model(seq), -] so norms/adds are 1/TP the bytes, and
+    # XLA lowers the TP boundary as all-gather + reduce-scatter (half the
+    # bytes of the naive activation all-reduce). Also pins the saved scan
+    # carry (remat boundary) to the sharded layout.
+    sp = lambda t: shard(t, "batch", "model", None)
+
+    def body(carry, lp):
+        x, aux = carry
+        h = norm(lp["ln1"], x)
+        x = sp(x + L.attention(lp["attn"], cfg, h, positions, causal=causal,
+                               attn_impl=cfg.attention_impl))
+        h = norm(lp["ln2"], x)
+        if moe:
+            y, a = MOE.moe_apply(lp["moe"], cfg, h, capacity_factor=cfg.capacity_factor)
+            return (sp(x + y), aux + a), None
+        return (sp(x + L.swiglu(lp["mlp"], h)), aux), None
+
+    x = sp(x)
+    (x, aux), _ = jax.lax.scan(_maybe_remat(cfg, body), (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def _encdec_encoder(cfg, params, frames):
+    b, s_enc, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s_enc)[None], (b, s_enc))
+    x = frames + _sinusoid(pos, cfg.d_model).astype(frames.dtype)
+    norm = _norm(cfg)
+
+    def body(x, lp):
+        h = norm(lp["ln1"], x)
+        x = x + L.attention(lp["attn"], cfg, h, pos, causal=False,
+                            attn_impl="xla")
+        h = norm(lp["ln2"], x)
+        return x + L.gelu_mlp(lp["mlp"], h), None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["enc_layers"])
+    return norm(params["enc_final_norm"], x)
+
+
+def _encdec_decoder(cfg, params, tokens, enc_out):
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    norm = _norm(cfg)
+
+    def body(x, lp):
+        h = norm(lp["ln1"], x)
+        x = x + L.attention(lp["self_attn"], cfg, h, pos, causal=True,
+                            attn_impl=cfg.attention_impl)
+        h = norm(lp["ln_x"], x)
+        x = x + L.attention(lp["cross_attn"], cfg, h, pos, causal=False, kv_x=enc_out)
+        h = norm(lp["ln2"], x)
+        return x + L.gelu_mlp(lp["mlp"], h), None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+    return x
+
+
+def _hybrid_stack(cfg, params, x, positions):
+    norm = _norm(cfg)
+
+    def body(x, lp):
+        h = norm(lp["ln"], x)
+        return x + M2.mamba2_forward(lp["mamba"], cfg, h), None
+
+    body = _maybe_remat(cfg, body)
+    off = 0
+    for i, seg in enumerate(_segments(cfg)):
+        x, _ = jax.lax.scan(body, x, _tree_slice(params["layers"], off, seg))
+        off += seg
+        if i < len(_segments(cfg)) - 1 or off == cfg.num_layers:
+            sa = params["shared_attn"]
+            h = norm(sa["ln"], x)
+            x = x + L.attention(sa["attn"], cfg, h, positions, causal=True,
+                                attn_impl=cfg.attention_impl)
+    return x
+
+
+def _ssm_stack(cfg, params, x):
+    b = x.shape[0]
+    d = cfg.d_model
+    h = d // cfg.ssm_head_dim
+    zero_shift = jnp.zeros((b, d), x.dtype)
+    zero_state = jnp.zeros((b, h, cfg.ssm_head_dim, cfg.ssm_head_dim), jnp.float32)
+
+    sp = lambda t: shard(t, "batch", "model", None)   # SP residual (see _dense_stack)
+
+    def body(x, lp):
+        hh = L.layernorm(lp["ln1"], x)
+        y, _, _ = R6.rwkv6_time_mix(lp["tm_cm"], cfg, hh, zero_shift, zero_state)
+        x = sp(x + y)
+        hh = L.layernorm(lp["ln2"], x)
+        y, _ = R6.rwkv6_channel_mix(lp["tm_cm"], cfg, hh, zero_shift)
+        return sp(x + y), None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), sp(x), params["layers"])
+    return x
+
+
+def forward(cfg, params: Params, batch: dict) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits [B,S,V], aux_loss)."""
+    fam = cfg.family
+    aux = jnp.float32(0.0)
+    if fam == "encdec":
+        enc_out = _encdec_encoder(cfg, params, batch["frames"])
+        x = _encdec_decoder(cfg, params, batch["tokens"], enc_out)
+    else:
+        tokens = batch["tokens"]
+        x = L.embed(params["embed"], tokens)
+        if fam == "vlm":
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if fam in ("dense", "vlm"):
+            x, aux = _dense_stack(cfg, params["layers"], x, positions)
+        elif fam == "moe":
+            x, aux = _dense_stack(cfg, params["layers"], x, positions, moe=True)
+        elif fam == "hybrid":
+            x = _hybrid_stack(cfg, params, x, positions)
+        elif fam == "ssm":
+            x = _ssm_stack(cfg, params, x)
+        else:
+            raise ValueError(fam)
+
+    x = _norm(cfg)(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = L.unembed(params["unembed"], x)
+    return logits, aux
+
+
+def loss_fn(cfg, params: Params, batch: dict) -> tuple[jnp.ndarray, dict]:
+    """ApproxIoT-weighted causal LM loss (unbiased full-stream estimate)."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # patch positions carry no labels
+        pad = jnp.full((labels.shape[0], cfg.num_patches), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = (labels >= 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    per_tok = -ll * mask
+    per_ex = per_tok.sum(-1) / jnp.maximum(mask.sum(-1), 1.0)          # [B]
+
+    w = batch.get("weight")
+    if w is None:
+        w = jnp.ones_like(per_ex)
+    loss = jnp.sum(w * per_ex) / jnp.maximum(jnp.sum(w), 1e-9)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": mask.sum(), "weight_sum": jnp.sum(w)}
+
+
+def build_encdec_cache(cfg, params: Params, frames: jnp.ndarray, seq: int):
+    """Serving helper: run the encoder and precompute per-decoder-layer
+    cross-attention K/V into a fresh decode cache. ``frames`` [B,S_enc,d]
+    must have S_enc == seq (the cache's cross length)."""
+    b = frames.shape[0]
+    enc_out = _encdec_encoder(cfg, params, frames)
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def one(lp):
+        k = _split(enc_out @ lp["cross_attn"]["wk"], hkv, hd)
+        v = _split(enc_out @ lp["cross_attn"]["wv"], hkv, hd)
+        return k, v
+
+    _split = lambda x, h, d: x.reshape(b, -1, h, d).transpose(0, 2, 1, 3)
+    ks, vs = jax.lax.map(one, params["layers"])
+    cache = init_cache(cfg, b, seq)
+    cache["k_cross"] = ks.astype(cache["k_cross"].dtype)
+    cache["v_cross"] = vs.astype(cache["v_cross"].dtype)
+    return cache
+
+
+# ----------------------------------------------------------------- decode --
+def cache_specs(cfg, batch: int, seq: int):
+    """ShapeDtypeStruct pytree of the decode cache (zero allocation)."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        jax.eval_shape(lambda: init_cache(cfg, batch, seq)))
+
+
+def init_cache(cfg, batch: int, seq: int):
+    dt = cfg.param_dtype
+    hkv, hd, lnum = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        return {"k": jnp.zeros((lnum, batch, hkv, seq, hd), dt),
+                "v": jnp.zeros((lnum, batch, hkv, seq, hd), dt)}
+    if fam == "encdec":
+        return {"k": jnp.zeros((lnum, batch, hkv, seq, hd), dt),
+                "v": jnp.zeros((lnum, batch, hkv, seq, hd), dt),
+                "k_cross": jnp.zeros((lnum, batch, hkv, seq, hd), dt),
+                "v_cross": jnp.zeros((lnum, batch, hkv, seq, hd), dt)}
+    if fam == "hybrid":
+        d_inner = 2 * cfg.d_model
+        n = cfg.ssm_state
+        h = d_inner // cfg.ssm_head_dim
+        n_attn = len(_segments(cfg))
+        return {
+            "conv": jnp.zeros((lnum, batch, M2.CONV_WIDTH - 1, d_inner + 2 * n), dt),
+            "ssm": jnp.zeros((lnum, batch, h, n, cfg.ssm_head_dim), jnp.float32),
+            "attn_k": jnp.zeros((n_attn, batch, hkv, seq, hd), dt),
+            "attn_v": jnp.zeros((n_attn, batch, hkv, seq, hd), dt),
+        }
+    if fam == "ssm":
+        d = cfg.d_model
+        h = d // cfg.ssm_head_dim
+        k = cfg.ssm_head_dim
+        return {"tm_shift": jnp.zeros((lnum, batch, d), dt),
+                "cm_shift": jnp.zeros((lnum, batch, d), dt),
+                "wkv": jnp.zeros((lnum, batch, h, k, k), jnp.float32)}
+    raise ValueError(fam)
+
+
+def decode_step(cfg, params: Params, cache, token: jnp.ndarray, pos: jnp.ndarray):
+    """One-token decode. token: [B,1] i32 → (logits [B,V], new cache)."""
+    fam = cfg.family
+    x = L.embed(params["embed"], token)          # [B,1,d]
+    norm = _norm(cfg)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(x, inp):
+            lp, kc, vc = inp
+            h = norm(lp["ln1"], x)
+            a, kc, vc = L.attention_decode(lp["attn"] if "attn" in lp else lp, cfg, h, kc, vc, pos)
+            x = x + a
+            h = norm(lp["ln2"], x)
+            if fam == "moe":
+                y, _ = MOE.moe_apply(lp["moe"], cfg, h, capacity_factor=cfg.capacity_factor)
+                x = x + y
+            else:
+                x = x + L.swiglu(lp["mlp"], h)
+            return x, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        cache = {"k": ks, "v": vs}
+
+    elif fam == "encdec":
+        x = x + _sinusoid(jnp.full((token.shape[0], 1), pos), cfg.d_model).astype(x.dtype)
+
+        def body(x, inp):
+            lp, kc, vc, kx, vx = inp
+            h = norm(lp["ln1"], x)
+            a, kc, vc = L.attention_decode(lp["self_attn"], cfg, h, kc, vc, pos)
+            x = x + a
+            h = norm(lp["ln_x"], x)
+            a, _, _ = L.attention_decode(lp["cross_attn"], cfg, h, kx, vx, pos,
+                                         update_cache=False, cross=True)
+            x = x + a
+            h = norm(lp["ln2"], x)
+            return x + L.gelu_mlp(lp["mlp"], h), (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache["k"], cache["v"], cache["k_cross"], cache["v_cross"]))
+        cache = {"k": ks, "v": vs, "k_cross": cache["k_cross"], "v_cross": cache["v_cross"]}
+
+    elif fam == "hybrid":
+        def body(x, inp):
+            lp, conv, ssm = inp
+            h = norm(lp["ln"], x)
+            y, st = M2.mamba2_decode(lp["mamba"], cfg, h, {"conv": conv, "ssm": ssm})
+            return x + y, (st["conv"], st["ssm"])
+
+        segs = _segments(cfg)
+        off = 0
+        convs, ssms, aks, avs = [], [], [], []
+        for i, seg in enumerate(segs):
+            sl = lambda t: jax.lax.slice_in_dim(t, off, off + seg, axis=0)
+            x, (cv, sm) = jax.lax.scan(
+                body, x, (_tree_slice(params["layers"], off, seg),
+                          sl(cache["conv"]), sl(cache["ssm"])))
+            convs.append(cv); ssms.append(sm)
+            off += seg
+            if i < len(segs) - 1 or off == cfg.num_layers:
+                sa = params["shared_attn"]
+                h = norm(sa["ln"], x)
+                a, ak, av = L.attention_decode(
+                    sa["attn"], cfg, h, cache["attn_k"][i], cache["attn_v"][i], pos)
+                x = x + a
+                aks.append(ak); avs.append(av)
+        cache = {"conv": jnp.concatenate(convs, 0), "ssm": jnp.concatenate(ssms, 0),
+                 "attn_k": jnp.stack(aks, 0), "attn_v": jnp.stack(avs, 0)}
+
+    elif fam == "ssm":
+        def body(x, inp):
+            lp, tm_s, cm_s, wkv = inp
+            h = L.layernorm(lp["ln1"], x)
+            y, tm_s, wkv = R6.rwkv6_decode(lp["tm_cm"], cfg, h, tm_s, wkv)
+            x = x + y
+            h = L.layernorm(lp["ln2"], x)
+            y, cm_s = R6.rwkv6_channel_mix_decode(lp["tm_cm"], cfg, h, cm_s)
+            return x + y, (tm_s, cm_s, wkv)
+
+        x, (tms, cms, wkvs) = jax.lax.scan(
+            body, x, (params["layers"], cache["tm_shift"], cache["cm_shift"], cache["wkv"]))
+        cache = {"tm_shift": tms, "cm_shift": cms, "wkv": wkvs}
+    else:
+        raise ValueError(fam)
+
+    x = norm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = L.unembed(params["unembed"], x)
+    return logits[:, 0, :], cache

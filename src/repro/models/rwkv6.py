@@ -1,0 +1,198 @@
+"""RWKV-6 "Finch" block — data-dependent decay linear attention
+[arXiv:2404.05892], chunked-parallel for training, O(1)-state decode.
+
+Recurrence per head (state S ∈ R^{K×V}):
+    y_t = r_t · (S_{t-1} + diag(u) · k_tᵀ v_t)
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+with per-channel decay  w_t = exp(−exp(w0 + tanh(x̃_t A) B))  (the LoRA
+data-dependence that defines RWKV-6). Token shift uses static per-channel
+mix coefficients (RWKV-5 style; the ddlerp refinement is orthogonal to the
+scan structure — noted in DESIGN.md).
+
+Chunked form with exclusive log-decay e_t = Σ_{τ<t} log w_τ:
+    y_t = (r_t ⊙ exp(e_t))·S_0                        (inter)
+        + Σ_{τ<t} [(r_t ⊙ exp(e_t))·(k_τ ⊙ exp(−e_{τ+1}))ᵀ] v_τ   (intra)
+        + (r_t ⊙ u ⊙ k_t)·1 v_t                        (bonus diag)
+    S_Q = exp(e_{Q+1})·S_0 + (k ⊙ exp(e_{Q+1} − e_next))ᵀ v
+Everything is fp32 matmuls; exponents are clamped (decay ≤ 0 ⇒ the only
+overflow risk is the factored exp(−e) term, bounded by the clamp).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.meshctx import shard
+
+Params = dict
+
+CHUNK = 64
+LORA_R = 64
+_CLAMP = 30.0  # exp argument clamp for the factored intra-chunk term
+
+
+def rwkv6_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim                      # head size (64)
+    h = d // hd
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    return {
+        # time-mix: static token-shift coefficients per projection
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "w_k": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "w_v": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "w_g": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "w_o": jax.random.normal(ks[4], (d, d), dtype) * s,
+        # data-dependent decay LoRA: w0 + tanh(x A) B
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": jax.random.normal(ks[5], (d, LORA_R), dtype) * s,
+        "w_lora_b": jax.random.normal(ks[6], (LORA_R, d), dtype) * LORA_R ** -0.5,
+        "u_bonus": jax.random.normal(ks[7], (h, hd), jnp.float32) * 0.1,
+        "ln_scale": jnp.ones((d,), dtype), "ln_bias": jnp.zeros((d,), dtype),
+        # channel-mix
+        "cm_mu": jnp.full((d,), 0.5, dtype),
+        "cm_k": jax.random.normal(ks[8], (d, cfg.d_ff), dtype) * s,
+        "cm_v": jax.random.normal(ks[9], (cfg.d_ff, d), dtype) * cfg.d_ff ** -0.5,
+        "cm_r": jax.random.normal(ks[10], (d, d), dtype) * s,
+    }
+
+
+def _token_shift(x, last):
+    """shifted_t = x_{t-1}; position 0 uses carried ``last``. [B,S,d]."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, x_shift, mu):
+    return x + (x_shift - x) * mu  # lerp(x, x_prev, mu)
+
+
+def rwkv6_time_mix(p: Params, cfg, x: jnp.ndarray, shift_last, state0):
+    """x: [B,S,d]; state0: [B,H,K,V] fp32. Returns (y, shift_out, stateN)."""
+    b, s, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    q = min(CHUNK, s)
+    assert s % q == 0
+    nc = s // q
+
+    xs = _token_shift(x, shift_last)
+    r = _mix(x, xs, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, xs, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, xs, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, xs, p["mu_g"]) @ p["w_g"])
+    xw = _mix(x, xs, p["mu_w"])
+    logw = -jnp.exp(
+        p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    )                                                            # [B,S,d] ≤ 0
+
+    def heads(t):  # [B,S,d] → [B,nc,Q,H,hd] fp32
+        return t.astype(jnp.float32).reshape(b, nc, q, h, hd)
+
+    rh, kh, vh, lw = heads(r), heads(k), heads(v), logw.reshape(b, nc, q, h, hd)
+    u = p["u_bonus"]                                             # [H,hd]
+
+    def chunk_step(state, inp):
+        r_c, k_c, v_c, lw_c = inp                  # [B,Q,H,K] etc (K=V=hd)
+        # Heads shard over TP; the [B,H,K,V] chunk state (the dominant
+        # saved activation of the chunked scan: nc per layer) stays
+        # head-sharded too — rwkv6-7b train drops TP× of its footprint.
+        r_c = shard(r_c, "batch", None, "model", None)
+        k_c = shard(k_c, "batch", None, "model", None)
+        v_c = shard(v_c, "batch", None, "model", None)
+        lw_c = shard(lw_c, "batch", None, "model", None)
+        state = shard(state, "batch", "model", None, None)
+        e_inc = jnp.cumsum(lw_c, axis=1)           # inclusive Σ_{τ≤t}
+        e_exc = e_inc - lw_c                       # exclusive Σ_{τ<t}
+        e_tot = e_inc[:, -1:, :, :]                # [B,1,H,K]
+
+        r_dec = r_c * jnp.exp(e_exc)                                   # [B,Q,H,K]
+        k_dec = k_c * jnp.exp(jnp.clip(-e_inc, None, _CLAMP))          # [B,Q,H,K]
+        att = jnp.einsum("bqhk,bthk->bhqt", r_dec, k_dec)              # [B,H,Q,Q]
+        strict = jnp.tril(jnp.ones((q, q), bool), k=-1)
+        att = jnp.where(strict[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhqt,bthv->bqhv", att, v_c)
+        bonus = jnp.einsum("bqhk,bqhk->bqh", r_c * u[None, None], k_c)
+        y_bonus = bonus[..., None] * v_c
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", r_dec, state)
+        # state to next chunk
+        k_scaled = k_c * jnp.exp(jnp.clip(e_tot - e_inc, None, _CLAMP))
+        ds = jnp.einsum("bqhk,bqhv->bhkv", k_scaled, v_c)
+        state = jnp.exp(e_tot[:, 0])[..., None] * state + ds
+        return state, y_intra + y_inter + y_bonus
+
+    inputs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rh, kh, vh, lw))
+    stateN, ys = jax.lax.scan(chunk_step, state0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, d)
+
+    # per-head group norm, then gate + out-proj
+    yg = y.reshape(b, s, h, hd)
+    mu = yg.mean(-1, keepdims=True)
+    var = jnp.var(yg, axis=-1, keepdims=True)
+    yg = ((yg - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    yg = yg * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+    out = (yg * g.astype(jnp.float32)).astype(x.dtype) @ p["w_o"]
+    return shard(out, "batch", None, None), x[:, -1, :], stateN
+
+
+def rwkv6_channel_mix(p: Params, cfg, x: jnp.ndarray, shift_last):
+    xs = _token_shift(x, shift_last)
+    xk = _mix(x, xs, p["cm_mu"])
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    kk = shard(kk, "batch", None, "model")
+    r = jax.nn.sigmoid(x @ p["cm_r"])
+    return shard(r * (kk @ p["cm_v"]), "batch", None, None), x[:, -1, :]
+
+
+def rwkv6_init_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    return {
+        "tm_shift": jnp.zeros((batch, d), dtype),
+        "cm_shift": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+    }
+
+
+def rwkv6_decode(p: Params, cfg, x: jnp.ndarray, tm_shift: jnp.ndarray, wkv_state: jnp.ndarray):
+    """One-token time-mix decode. x: [B,1,d] → (out, new_shift, new_wkv)."""
+    b, _, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    xs = tm_shift[:, None, :]
+    r = _mix(x, xs, p["mu_r"]) @ p["w_r"]
+    k = _mix(x, xs, p["mu_k"]) @ p["w_k"]
+    v = _mix(x, xs, p["mu_v"]) @ p["w_v"]
+    g = jax.nn.silu(_mix(x, xs, p["mu_g"]) @ p["w_g"])
+    xw = _mix(x, xs, p["mu_w"])
+    logw = -jnp.exp(
+        p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    )
+    rh = r.astype(jnp.float32).reshape(b, h, hd)
+    kh = k.astype(jnp.float32).reshape(b, h, hd)
+    vh = v.astype(jnp.float32).reshape(b, h, hd)
+    w = jnp.exp(logw.reshape(b, h, hd))
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, wkv_state + p["u_bonus"][..., None] * kv)
+    wkv = w[..., None] * wkv_state + kv
+
+    yg = y.reshape(b, 1, h, hd)
+    mu = yg.mean(-1, keepdims=True)
+    var = jnp.var(yg, axis=-1, keepdims=True)
+    yg = ((yg - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, 1, d)
+    yg = yg * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+    out = (yg * g.astype(jnp.float32)).astype(x.dtype) @ p["w_o"]
+    return out, x[:, -1, :], wkv
+
+
+def rwkv6_channel_mix_decode(p: Params, cfg, x: jnp.ndarray, shift_last):
+    """One-token channel mix. x: [B,1,d] → (out, new_shift)."""
+    xs = shift_last[:, None, :]
+    xk = _mix(x, xs, p["cm_mu"])
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    r = jax.nn.sigmoid(x @ p["cm_r"])
+    return r * (kk @ p["cm_v"]), x[:, -1, :]

@@ -1,0 +1,41 @@
+"""The jit-able train/prefill steps shared by the launcher and dry-run."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig):
+    """(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, argnums=1, has_aux=True)(cfg, params, batch)
+        params, opt_state, opt_m = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, **opt_m, total_loss=loss)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg):
+    """(params, batch) → logits — inference prefill (no cache output here;
+    the serving path materializes the cache, see launch/serve.py)."""
+
+    def step(params, batch):
+        logits, _ = M.forward(cfg, params, batch)
+        return logits
+
+    return step
+
+
+def make_decode_step(cfg):
+    def step(params, cache, token, pos):
+        return M.decode_step(cfg, params, cache, token, pos)
+
+    return step

@@ -1,0 +1,50 @@
+"""Adaptive budget controller — the paper's ``costFunction(budget)``
+(Alg. 1 line 3) plus the "adaptive feedback mechanism" of §IV-B, which
+the paper leaves as future work: we close the loop with a PI controller.
+
+Two constraints, both expressible as a sample-size budget:
+  * latency: keep measured interval processing time ≤ target,
+  * accuracy: keep the root's relative ±2σ bound ≤ target (grow the
+    sample when the error budget is violated).
+The controller is per-node and uses only local measurements — no
+cross-node coordination, preserving the paper's scalability property.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class BudgetConfig:
+    min_size: int
+    max_size: int
+    target_latency_s: float | None = None
+    target_rel_error: float | None = None   # relative ±2σ / estimate
+    kp: float = 0.5
+    ki: float = 0.1
+
+
+class BudgetController:
+    def __init__(self, cfg: BudgetConfig, initial_size: int):
+        self.cfg = cfg
+        self.size = float(initial_size)
+        self._i_lat = 0.0
+        self._i_err = 0.0
+
+    def update(self, *, latency_s: float | None = None,
+               rel_error: float | None = None) -> int:
+        c = self.cfg
+        scale = 0.0
+        if c.target_latency_s is not None and latency_s is not None:
+            # positive err → too slow → shrink the sample
+            err = (latency_s - c.target_latency_s) / c.target_latency_s
+            self._i_lat = max(min(self._i_lat + err, 5.0), -5.0)
+            scale -= c.kp * err + c.ki * self._i_lat
+        if c.target_rel_error is not None and rel_error is not None:
+            # positive err → too inaccurate → grow the sample
+            err = (rel_error - c.target_rel_error) / max(c.target_rel_error, 1e-9)
+            self._i_err = max(min(self._i_err + err, 5.0), -5.0)
+            scale += c.kp * err + c.ki * self._i_err
+        self.size = self.size * (1.0 + max(min(scale, 1.0), -0.5))
+        self.size = max(min(self.size, c.max_size), c.min_size)
+        return int(self.size)

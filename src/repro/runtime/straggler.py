@@ -1,0 +1,61 @@
+"""Straggler mitigation via ApproxIoT weight calibration (beyond-paper).
+
+In synchronous data-parallel training the step waits for the slowest
+shard. ApproxIoT's asynchronous-interval fix (Eq. 9) gives a principled
+alternative: treat each DP shard as an edge node feeding the step (the
+root query). If a shard misses the interval deadline, its examples simply
+didn't arrive — ``c_i`` drops — and re-calibrating the weights of the
+shards that DID arrive keeps the weighted loss an unbiased estimate of
+the full-batch loss. The gradient is a linear query, so the same
+correction applies to it.
+
+Also provides the interval-deadline bookkeeping used by the train loop to
+decide who "arrived" (deadline = multiple of the median shard latency).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    deadline_factor: float = 2.0   # × median shard latency
+    min_quorum: float = 0.5        # refuse the step below this arrival rate
+
+
+def calibrate_weights(weight: np.ndarray, present: np.ndarray) -> np.ndarray:
+    """Eq. 9 applied to shard dropout.
+
+    ``weight`` f32[B] — per-example ApproxIoT weights; ``present`` bool[B]
+    — examples whose shard met the deadline. The surviving examples'
+    weights are scaled by (Σ all w)/(Σ present w), so the weighted-loss
+    estimator still targets the full-stream mean; absent examples get 0.
+    """
+    total = float(weight.sum())
+    kept = float(weight[present].sum())
+    if kept <= 0.0:
+        return np.zeros_like(weight)
+    alpha = kept / total                      # fraction that arrived
+    out = np.where(present, weight / alpha, 0.0)
+    return out.astype(weight.dtype)
+
+
+class DeadlineTracker:
+    """Rolling per-shard latency stats → who is a straggler this step."""
+
+    def __init__(self, num_shards: int, cfg: StragglerConfig | None = None):
+        self.cfg = cfg or StragglerConfig()
+        self.lat = np.zeros((0, num_shards), np.float64)
+
+    def observe(self, shard_latencies: np.ndarray) -> np.ndarray:
+        """Record latencies; return bool[num_shards] present-mask."""
+        self.lat = np.vstack([self.lat[-63:], shard_latencies[None]])
+        med = float(np.median(self.lat))
+        deadline = self.cfg.deadline_factor * med
+        present = shard_latencies <= deadline
+        if present.mean() < self.cfg.min_quorum:
+            # degenerate interval — wait for everyone rather than bias hard
+            present = np.ones_like(present)
+        return present

@@ -1,0 +1,85 @@
+"""Error-bound (§III-D) correctness: variance estimates and CLT coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import error as err, queries, whs
+from repro.core.types import IntervalBatch, StratumMeta
+
+
+def test_sample_variance_matches_numpy():
+    rng = np.random.default_rng(0)
+    vals = rng.normal(3, 2, 500).astype(np.float32)
+    strata = rng.integers(0, 3, 500).astype(np.int32)
+    sel = rng.random(500) < 0.7
+    y, s1, s2 = err.stratum_moments(jnp.asarray(vals), jnp.asarray(strata),
+                                    jnp.asarray(sel), 3)
+    s_sq = np.asarray(err.sample_variance(y, s1, s2))
+    for i in range(3):
+        ref = np.var(vals[sel & (strata == i)], ddof=1)
+        np.testing.assert_allclose(s_sq[i], ref, rtol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_zero_variance_when_fully_sampled(seed):
+    """c_i ≤ N_i ⇒ FPC kills the variance: exact answer, zero bound."""
+    rng = np.random.default_rng(seed)
+    m = 64
+    vals = rng.normal(0, 1, m).astype(np.float32)
+    batch = IntervalBatch(jnp.asarray(vals), jnp.zeros((m,), jnp.int32),
+                          jnp.ones((m,), bool), StratumMeta.identity(1))
+    res = whs.whsamp(jax.random.PRNGKey(seed), batch, jnp.float32(m), 1)
+    q = queries.weighted_sum(batch, res, 1)
+    np.testing.assert_allclose(float(q.estimate), vals.sum(), rtol=1e-5)
+    assert float(q.variance) == 0.0
+
+
+def test_two_sigma_coverage():
+    """±2σ bound contains the exact sum ≈95% of the time (CLT)."""
+    rng = np.random.default_rng(42)
+    m, x = 4096, 4
+    strata = rng.integers(0, x, m).astype(np.int32)
+    vals = rng.normal(50, 20, m).astype(np.float32)
+    batch = IntervalBatch(jnp.asarray(vals), jnp.asarray(strata),
+                          jnp.ones((m,), bool), StratumMeta.identity(x))
+    exact = float(vals.sum())
+    hits = 0
+    trials = 100
+    for t in range(trials):
+        res = whs.whsamp(jax.random.PRNGKey(t), batch, jnp.float32(400), x)
+        q = queries.weighted_sum(batch, res, x)
+        if abs(float(q.estimate) - exact) <= float(q.bound(2.0)):
+            hits += 1
+    assert hits >= 85, f"2σ coverage only {hits}/{trials}"
+
+
+def test_mean_estimator_and_bound():
+    rng = np.random.default_rng(7)
+    m, x = 2048, 2
+    strata = (np.arange(m) % x).astype(np.int32)
+    vals = np.where(strata == 0, rng.normal(10, 1, m),
+                    rng.normal(1000, 10, m)).astype(np.float32)
+    batch = IntervalBatch(jnp.asarray(vals), jnp.asarray(strata),
+                          jnp.ones((m,), bool), StratumMeta.identity(x))
+    res = whs.whsamp(jax.random.PRNGKey(0), batch, jnp.float32(256), x)
+    q = queries.weighted_mean(batch, res, x)
+    exact = float(vals.mean())
+    assert abs(float(q.estimate) - exact) / exact < 0.05
+    assert float(q.variance) > 0
+
+
+def test_histogram_estimates_counts():
+    rng = np.random.default_rng(8)
+    m, x = 4096, 2
+    strata = (np.arange(m) % x).astype(np.int32)
+    vals = rng.uniform(0, 10, m).astype(np.float32)
+    batch = IntervalBatch(jnp.asarray(vals), jnp.asarray(strata),
+                          jnp.ones((m,), bool), StratumMeta.identity(x))
+    res = whs.whsamp(jax.random.PRNGKey(0), batch, jnp.float32(1024), x)
+    edges = jnp.linspace(0, 10, 6)
+    q = queries.weighted_histogram(batch, res, x, edges)
+    exact, _ = np.histogram(vals, np.asarray(edges))
+    rel = np.abs(np.asarray(q.estimate) - exact) / np.maximum(exact, 1)
+    assert (rel < 0.2).all(), rel

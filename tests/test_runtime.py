@@ -1,0 +1,121 @@
+"""Fault-tolerance substrate: checkpoint atomicity/restore, straggler
+calibration unbiasedness, budget controller convergence."""
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.runtime.budget import BudgetConfig, BudgetController
+from repro.runtime.straggler import DeadlineTracker, calibrate_weights
+
+
+# ------------------------------------------------------------- checkpoint --
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32), "d": jnp.float32(7.0)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 3, t, meta={"step": 3})
+    assert ckpt.latest_step(tmp_path) == 3
+    restored, meta = ckpt.restore(tmp_path, 3, jax.eval_shape(lambda: t))
+    assert meta["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_n_and_tmp_ignored(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(tmp_path, s, t, keep_n=2)
+    steps = sorted(p.name for p in pathlib.Path(tmp_path).iterdir())
+    assert steps == ["step_000000003", "step_000000004"]
+    # a crashed write (tmp dir) must not be visible as a checkpoint
+    (pathlib.Path(tmp_path) / "step_000000099.tmp").mkdir()
+    assert ckpt.latest_step(tmp_path) == 4
+
+
+def test_checkpoint_elastic_restore_resharded(tmp_path):
+    """Restore onto explicit shardings (1-device 'new mesh')."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    t = _tree()
+    ckpt.save(tmp_path, 0, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    restored, _ = ckpt.restore(tmp_path, 0, jax.eval_shape(lambda: t),
+                               shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_async_checkpointer(tmp_path):
+    c = ckpt.AsyncCheckpointer(tmp_path)
+    c.save(5, _tree(), meta={"step": 5})
+    c.wait()
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+# -------------------------------------------------------------- straggler --
+def test_calibrated_weights_unbiased():
+    """E[Σ w'·x over present] == Σ w·x when shards drop out at random."""
+    rng = np.random.default_rng(0)
+    b = 256
+    w = rng.uniform(0.5, 4.0, b).astype(np.float32)
+    x = rng.normal(2, 1, b).astype(np.float32)
+    target = float((w * x).sum())
+    ests = []
+    for t in range(400):
+        present = rng.random(b) > 0.3
+        w2 = calibrate_weights(w, present)
+        # estimator of the weighted *mean* is exactly unbiased; the sum
+        # estimator needs the total-weight scale which calibrate preserves:
+        ests.append(float((w2 * x).sum()))
+    bias = abs(np.mean(ests) - target) / abs(target)
+    assert bias < 0.05, bias
+
+
+def test_calibrated_weights_zero_absent_and_scale():
+    w = np.ones((4,), np.float32)
+    present = np.array([True, True, False, False])
+    w2 = calibrate_weights(w, present)
+    assert (w2[~present] == 0).all()
+    np.testing.assert_allclose(w2[present], 2.0)  # 1/α with α=0.5
+
+
+def test_deadline_tracker_flags_outliers():
+    tr = DeadlineTracker(num_shards=8)
+    for _ in range(10):
+        tr.observe(np.full(8, 1.0))
+    lat = np.full(8, 1.0)
+    lat[3] = 50.0
+    present = tr.observe(lat)
+    assert not present[3] and present.sum() == 7
+
+
+# ----------------------------------------------------------------- budget --
+def test_budget_controller_shrinks_on_latency():
+    c = BudgetController(BudgetConfig(min_size=10, max_size=1000,
+                                      target_latency_s=1.0), 500)
+    for _ in range(10):
+        size = c.update(latency_s=2.0)
+    assert size < 500
+
+
+def test_budget_controller_grows_on_error():
+    c = BudgetController(BudgetConfig(min_size=10, max_size=1000,
+                                      target_rel_error=0.01), 100)
+    for _ in range(10):
+        size = c.update(rel_error=0.05)
+    assert size > 100
+
+
+def test_budget_controller_respects_bounds():
+    c = BudgetController(BudgetConfig(min_size=10, max_size=200,
+                                      target_latency_s=1.0), 100)
+    for _ in range(50):
+        size = c.update(latency_s=100.0)
+    assert size == 10

@@ -1,0 +1,32 @@
+"""SRS baseline through the HostTree: Horvitz–Thompson unbiasedness and
+the accuracy gap vs WHS that the paper's evaluation rests on."""
+import numpy as np
+import pytest
+
+from repro.data import stream as S
+from repro.launch.analytics import run_pipeline
+
+
+def test_srs_pipeline_roughly_unbiased():
+    losses = [run_pipeline(S.paper_gaussian(), fraction=0.3, ticks=6, seed=s,
+                           mode="srs")["accuracy_loss"] for s in (1, 2, 3, 4)]
+    # per-run HT noise is a few %, but the signed errors average out
+    assert np.mean(losses) < 0.06
+
+
+def test_whs_beats_srs_under_skew():
+    specs = S.paper_poisson(rates=tuple(4000 * sh for sh in S.SKEW_SHARES),
+                            skewed=True)
+    whs = run_pipeline(specs, fraction=0.1, ticks=5, seed=3)["accuracy_loss"]
+    srs = run_pipeline(specs, fraction=0.1, ticks=5, seed=3,
+                       mode="srs")["accuracy_loss"]
+    assert whs * 50 < srs, (whs, srs)     # paper: 2600× at this setting
+
+
+def test_srs_bandwidth_exceeds_whs_at_equal_fraction():
+    """Per-level coin flip keeps f^(1/3) at hop 0 — one reason stratified
+    budget-based sampling also wins on bandwidth (Fig. 8)."""
+    whs = run_pipeline(S.paper_gaussian(), fraction=0.1, ticks=4, seed=1)
+    srs = run_pipeline(S.paper_gaussian(), fraction=0.1, ticks=4, seed=1,
+                       mode="srs")
+    assert srs["bandwidth_fraction"] > 2 * whs["bandwidth_fraction"]

@@ -1,0 +1,87 @@
+"""System-level behaviour: the paper's headline claims, reproduced.
+
+Each test maps to a claim in the paper's abstract/evaluation:
+  * accuracy 3.3x-8.8x better than SRS at equal fraction (Figs. 6/11),
+  * throughput gain from sampling vs native execution (Figs. 7/12b),
+  * overhead of the sampler ~0 at fraction 1.0 (Fig. 7),
+  * SRS catastrophically wrong under skew, WHS fine (Fig. 11c).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import queries, srs, whs
+from repro.core.types import IntervalBatch, StratumMeta
+
+
+def _skewed_batch(seed, m=8192, x=4):
+    rng = np.random.default_rng(seed)
+    shares = (0.80, 0.1989, 0.001, 0.0001)
+    sizes = [max(int(m * s), 1) for s in shares]
+    sizes[0] = m - sum(sizes[1:])
+    strata = np.concatenate([np.full(s, i) for i, s in enumerate(sizes)])
+    vals = np.concatenate([
+        rng.poisson(10.0, sizes[0]),
+        rng.poisson(100.0, sizes[1]),
+        rng.poisson(1000.0, sizes[2]),
+        rng.poisson(10_000_000.0, sizes[3]),
+    ]).astype(np.float32)
+    perm = rng.permutation(len(vals))
+    return IntervalBatch(jnp.asarray(vals[perm]),
+                         jnp.asarray(strata[perm], jnp.int32),
+                         jnp.ones((len(vals),), bool),
+                         StratumMeta.identity(x)), float(vals.sum())
+
+
+def _accuracy(fraction, trials=15):
+    whs_err, srs_err = [], []
+    for t in range(trials):
+        batch, exact = _skewed_batch(t)
+        m = batch.capacity
+        res = whs.whsamp(jax.random.PRNGKey(t), batch,
+                         jnp.float32(fraction * m), 4)
+        q = queries.weighted_sum(batch, res, 4)
+        whs_err.append(abs(float(q.estimate) - exact) / exact)
+        sel = srs.srs_select(jax.random.PRNGKey(1000 + t), batch, fraction)
+        q2 = srs.srs_sum(batch, sel, fraction)
+        srs_err.append(abs(float(q2.estimate) - exact) / exact)
+    return float(np.mean(whs_err)), float(np.mean(srs_err))
+
+
+def test_claim_accuracy_beats_srs_under_skew():
+    """Fig. 11c: at 10% sampling, WHS accuracy many times better than SRS."""
+    whs_e, srs_e = _accuracy(0.10)
+    assert whs_e < 0.01, f"WHS accuracy loss too high: {whs_e}"
+    assert srs_e > 3.3 * whs_e, f"expected >=3.3x gap: whs={whs_e} srs={srs_e}"
+
+
+def test_claim_accuracy_improves_with_fraction():
+    """Fig. 6: accuracy loss decreases monotonically-ish with fraction."""
+    e10, _ = _accuracy(0.10, trials=8)
+    e60, _ = _accuracy(0.60, trials=8)
+    assert e60 < e10
+
+
+def test_claim_throughput_scales_with_sampling():
+    """Figs. 7/12b: root-side work scales ~1/fraction (items forwarded)."""
+    from repro.data import stream as S
+    from repro.launch.analytics import run_pipeline
+    r10 = run_pipeline(S.paper_gaussian(), fraction=0.1, ticks=6, seed=0)
+    r80 = run_pipeline(S.paper_gaussian(), fraction=0.8, ticks=6, seed=0)
+    # the paper reports 1.3x-9.9x throughput at 80%→10% fractions; the
+    # structural proxy is items-forwarded-to-root per ingested item.
+    speedup = r80["bandwidth_fraction"] / r10["bandwidth_fraction"]
+    assert speedup > 3.0, speedup
+
+
+def test_claim_sampler_overhead_near_zero_at_full_fraction():
+    """Fig. 7: fraction=1.0 ≈ native: nothing dropped, weights all 1."""
+    batch, exact = _skewed_batch(0)
+    res = whs.whsamp(jax.random.PRNGKey(0), batch,
+                     jnp.float32(batch.capacity), 4)
+    q = queries.weighted_sum(batch, res, 4)
+    assert int(res.selected.sum()) == batch.capacity
+    np.testing.assert_allclose(np.asarray(res.meta.weight), 1.0)
+    np.testing.assert_allclose(float(q.estimate), exact, rtol=1e-5)
+    assert float(q.variance) == 0.0

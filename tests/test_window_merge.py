@@ -1,0 +1,67 @@
+"""Window metadata semantics (§III-C + the parallel-merge correction).
+
+The interval accumulators must (a) sum counts over intra-interval
+messages, (b) combine weights by count-weighted mean — preserving the
+represented-item total Σ wₖCₖ — and (c) fall back to sticky values for
+strata with no fresh metadata (Fig. 3 late-item case).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.window import Window
+
+
+def test_two_children_counts_sum_weights_average():
+    w = Window(capacity=64, num_strata=2, interval_ticks=1)
+    # child A: 4 items of stratum 0, weight 3, count 4
+    w.deliver(np.ones(4, np.float32), np.zeros(4, np.int32),
+              np.array([3.0, 1.0], np.float32), np.array([4.0, 0.0], np.float32))
+    # child B: 8 items of stratum 0, weight 6, count 8
+    w.deliver(np.ones(8, np.float32), np.zeros(8, np.int32),
+              np.array([6.0, 1.0], np.float32), np.array([8.0, 0.0], np.float32))
+    _, _, _, w_in, c_in = w.flush()
+    assert c_in[0] == 12.0                       # counts sum
+    np.testing.assert_allclose(w_in[0], (3 * 4 + 6 * 8) / 12)   # cw-mean
+    # stratum 1 had no items delivered: sticky defaults survive
+    assert w_in[1] == 1.0 and c_in[1] == 0.0
+
+
+def test_sticky_across_intervals():
+    w = Window(capacity=64, num_strata=1, interval_ticks=1)
+    w.deliver(np.ones(4, np.float32), np.zeros(4, np.int32),
+              np.array([5.0], np.float32), np.array([4.0], np.float32))
+    w.flush()
+    # next interval: items arrive with NO metadata (late relative to their
+    # W/C message, Fig. 3) → the saved sets apply
+    w.deliver(np.ones(2, np.float32), np.zeros(2, np.int32))
+    _, _, _, w_in, c_in = w.flush()
+    assert w_in[0] == 5.0 and c_in[0] == 4.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.floats(1.0, 100.0), st.integers(1, 20)),
+                min_size=1, max_size=6))
+def test_merge_preserves_represented_total(messages):
+    """Σ w_eff·c_eff over the interval == Σ over messages wₖ·Cₖ (the pool
+    must represent exactly the items its children claimed to represent)."""
+    w = Window(capacity=256, num_strata=1, interval_ticks=1)
+    for wk, ck in messages:
+        w.deliver(np.ones(ck, np.float32), np.zeros(ck, np.int32),
+                  np.array([wk], np.float32), np.array([float(ck)], np.float32))
+    _, _, _, w_in, c_in = w.flush()
+    want = sum(wk * ck for wk, ck in messages)
+    np.testing.assert_allclose(w_in[0] * c_in[0], want, rtol=1e-5)
+
+
+def test_max_rule_would_overestimate():
+    """Documents the paper correction: max-combining unequal children
+    inflates the represented total; the count-weighted mean does not."""
+    w = Window(capacity=64, num_strata=1, interval_ticks=1)
+    w.deliver(np.ones(10, np.float32), np.zeros(10, np.int32),
+              np.array([2.0], np.float32), np.array([10.0], np.float32))
+    w.deliver(np.ones(10, np.float32), np.zeros(10, np.int32),
+              np.array([4.0], np.float32), np.array([10.0], np.float32))
+    _, _, _, w_in, c_in = w.flush()
+    true_total = 2 * 10 + 4 * 10                  # 60 represented items
+    assert w_in[0] * c_in[0] == true_total        # cw-mean: exact
+    assert max(2.0, 4.0) * c_in[0] > true_total   # max rule: +33%
