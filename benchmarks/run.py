@@ -1,7 +1,12 @@
 """Benchmark harness entry point — one module per paper table/figure plus
 the framework-integration and roofline tables.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...] \
+        [--json out.json]
+
+``--json`` writes every module's result rows (plus wall time and status)
+to one file, so CI / future PRs can record ``BENCH_*.json`` throughput
+trajectories instead of scraping stdout.
 
 Modules:
     fig6   accuracy vs sampling fraction (WHS vs SRS; Gaussian/Poisson)
@@ -25,9 +30,14 @@ MODULES = ("fig6", "fig7", "fig9", "fig11", "fig12", "train", "kernels",
 
 
 def main(argv=None) -> int:
+    import json
+    import pathlib
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all module result rows to PATH as JSON")
     args = ap.parse_args(argv)
     chosen = args.only.split(",") if args.only else list(MODULES)
 
@@ -40,17 +50,26 @@ def main(argv=None) -> int:
         "kernels": kernels_micro, "roofline": roofline,
     }
     failures = 0
+    report = {}
     for name in chosen:
         print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
         t0 = time.time()
         try:
-            impl[name].run()
-            print(f"[{name}] ok in {time.time() - t0:.1f}s")
-        except Exception:
+            rows = impl[name].run()
+            dt = time.time() - t0
+            report[name] = {"ok": True, "seconds": dt, "rows": rows}
+            print(f"[{name}] ok in {dt:.1f}s")
+        except Exception as e:
             failures += 1
+            dt = time.time() - t0
+            report[name] = {"ok": False, "seconds": dt, "error": repr(e)}
             traceback.print_exc()
-            print(f"[{name}] FAILED after {time.time() - t0:.1f}s")
+            print(f"[{name}] FAILED after {dt:.1f}s")
     print(f"\nbenchmarks done: {len(chosen) - failures}/{len(chosen)} ok")
+    if args.json:
+        path = pathlib.Path(args.json)
+        path.write_text(json.dumps(report, indent=1, default=str))
+        print(f"wrote {path}")
     return 1 if failures else 0
 
 

@@ -17,8 +17,29 @@ sample of the union — used for §III-E distributed execution), and lowers
 to one sort + gathers on TPU instead of a data-dependent loop.
 
 All shapes are static; the dynamic item count rides in ``valid``.
+
+Selection is routed through a pluggable ``SamplerBackend`` so the same
+WHSamp math can run on either of two equivalent realizations:
+
+* ``argsort``  — one XLA sort over (stratum, priority) composite keys and
+  a rank test (this module's ``stratified_priority_sample``).
+* ``topk``     — exact per-stratum thresholds from a dense ``lax.top_k``
+  (partial selection beats a full sort ~3× on CPU) with stable,
+  position-ordered tie resolution, so its masks are bit-identical to
+  ``argsort``'s.
+* ``pallas``   — per-stratum counts via the fused ``stratified_stats``
+  kernel, exact thresholds τ_i from ``kernels.sample_mask.ops``, then the
+  fused ``sample_mask`` Pallas kernel for the threshold-select pass
+  (compiled on TPU, interpret mode elsewhere).
+
+All produce identical keep-masks for identical priorities (``pallas`` may
+keep extra items on exact f32 priority ties — measure-zero for continuous
+draws); callers pick one by name (``get_backend``) everywhere a sampler
+runs.
 """
 from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -93,11 +114,13 @@ def stratified_priority_sample(
     m = stratum.shape[0]
     if priorities is None:
         priorities = jax.random.uniform(key, (m,))
-    # Composite sort key: [stratum, descending priority]; invalid items are
-    # banished to a sentinel stratum that sorts last.
-    seg = jnp.where(valid, stratum, num_strata).astype(jnp.float32)
-    sort_key = seg * 2.0 + (1.0 - jnp.where(valid, priorities, -0.5))
-    order = jnp.argsort(sort_key)
+    # Lexicographic sort [stratum asc, priority desc]; invalid items are
+    # banished to a sentinel stratum that sorts last. Two full-precision
+    # keys (not one packed float key): packing seg into the exponent bits
+    # ties nearby priorities once seg grows, which breaks the exact
+    # per-node ≡ level-flattened equivalence the engine relies on.
+    seg = jnp.where(valid, stratum, num_strata)
+    order = jnp.lexsort((jnp.where(valid, -priorities, 0.5), seg))
 
     counts_ext = jnp.zeros((num_strata + 2,), jnp.int32).at[
         jnp.where(valid, stratum, num_strata)
@@ -110,6 +133,186 @@ def stratified_priority_sample(
     keep_sorted = rank < res_ext[seg_sorted]
 
     return jnp.zeros((m,), bool).at[order].set(keep_sorted) & valid
+
+
+# --------------------------------------------------------------------------
+# Pluggable sampler backends.
+# --------------------------------------------------------------------------
+@runtime_checkable
+class SamplerBackend(Protocol):
+    """The two operations WHSamp needs from a selection engine.
+
+    Implementations must agree on the output *law*: ``counts`` returns
+    exact per-stratum valid-item counts, and ``select`` keeps exactly the
+    per-stratum top-``N_i`` items by priority (ties broken arbitrarily).
+    Given identical ``priorities`` all backends return identical masks, so
+    they are interchangeable mid-pipeline and testable against each other.
+    """
+
+    name: str
+
+    def counts(self, stratum: jnp.ndarray, valid: jnp.ndarray,
+               num_strata: int) -> jnp.ndarray:
+        """Valid items per stratum. f32[X]."""
+        ...
+
+    def select(self, key, stratum: jnp.ndarray, valid: jnp.ndarray,
+               reservoirs: jnp.ndarray, num_strata: int, *,
+               priorities: jnp.ndarray | None = None,
+               max_reservoir: int | None = None,
+               batch_hint: int = 1) -> jnp.ndarray:
+        """Per-stratum top-``N_i``-by-priority keep mask. bool[M].
+
+        ``max_reservoir`` is an optional *static* upper bound on every
+        ``N_i`` (e.g. the level's interval budget); backends may exploit
+        it (``topk`` sizes its partial selection with it) or ignore it.
+        ``batch_hint`` tells the backend how many sibling problems are
+        being vmapped over this call (the level engine passes its node
+        count) so memory guards can account for the whole batch.
+        """
+        ...
+
+
+class ArgsortBackend:
+    """Reference backend: one XLA lexsort + rank test (always available)."""
+
+    name = "argsort"
+
+    def counts(self, stratum, valid, num_strata):
+        return stratum_counts(stratum, valid, num_strata)
+
+    def select(self, key, stratum, valid, reservoirs, num_strata, *,
+               priorities=None, max_reservoir=None, batch_hint=1):
+        return stratified_priority_sample(
+            key, stratum, valid, reservoirs, num_strata, priorities=priorities
+        )
+
+
+class TopKBackend:
+    """Threshold backend: τ_i from a dense per-stratum ``lax.top_k``.
+
+    Densifies priorities to ``[X, M]`` (invalid/foreign slots → −1), takes
+    the top ``max_reservoir`` per stratum, and reads τ_i = the ``N_i``-th
+    largest. Items with ``u > τ`` are kept outright; items with ``u == τ``
+    (exact f32 ties) are kept in buffer-position order until the reservoir
+    is full — the same (priority desc, position asc) law as the stable
+    lexsort, so masks are **bit-identical** to ``argsort``'s. Partial
+    selection is ~3× cheaper than the full sort on CPU; the dense matrix
+    costs ``X·M`` memory **per vmapped sibling** (``batch_hint`` of them
+    under the level engine), so selection falls back to ``argsort`` when
+    the whole batch exceeds ``_DENSE_LIMIT`` or no static
+    ``max_reservoir`` is known.
+    """
+
+    name = "topk"
+    _DENSE_LIMIT = 1 << 22  # elements of the densified [X, M] matrices
+
+    def counts(self, stratum, valid, num_strata):
+        return stratum_counts(stratum, valid, num_strata)
+
+    def select(self, key, stratum, valid, reservoirs, num_strata, *,
+               priorities=None, max_reservoir=None, batch_hint=1):
+        m = stratum.shape[0]
+        if priorities is None:
+            priorities = jax.random.uniform(key, (m,))
+        if (max_reservoir is None
+                or max(int(batch_hint), 1) * num_strata * m > self._DENSE_LIMIT):
+            return stratified_priority_sample(
+                key, stratum, valid, reservoirs, num_strata,
+                priorities=priorities,
+            )
+        k = int(min(m, max(int(max_reservoir), 1)))
+        p_eff = jnp.where(valid, priorities, -1.0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (num_strata, m), 0)
+        onrow = stratum[None, :] == cols
+        dense = jnp.where(onrow, p_eff[None, :], -1.0)
+        topv = jax.lax.top_k(dense, k)[0]                       # [X, k] desc
+        n_int = reservoirs.astype(jnp.int32)
+        tau = jnp.take_along_axis(
+            topv, jnp.clip(n_int - 1, 0, k - 1)[:, None], axis=1)[:, 0]
+        # N_i ≤ 0 keeps nothing (τ above any priority); τ == −1 (stratum
+        # smaller than its reservoir) keeps every valid item.
+        tau = jnp.where(n_int <= 0, 2.0, tau)
+        seg_tau = tau[stratum]
+        strict = valid & (priorities > seg_tau)
+        m_strict = jnp.zeros((num_strata,), jnp.int32).at[stratum].add(
+            strict.astype(jnp.int32))
+        slack = n_int - m_strict
+        tie = valid & (priorities == seg_tau)
+        tie_rank = jnp.cumsum(
+            jnp.where(onrow, tie[None, :].astype(jnp.int32), 0), axis=1)
+        rank_at = tie_rank[stratum, jnp.arange(m)]
+        return strict | (tie & (rank_at <= slack[stratum]))
+
+
+class PallasBackend:
+    """TPU-native backend built on the two Pallas kernels.
+
+    ``counts`` is the count column of the fused ``stratified_stats`` pass;
+    ``select`` finds exact per-stratum thresholds τ_i (tiny sort) and runs
+    the fused ``sample_mask`` threshold kernel over the item buffer. On
+    non-TPU hosts the kernels execute in interpret mode, so the backend is
+    selectable (and bit-checked against ``argsort``) everywhere.
+
+    ``flatten_for_level = True``: the level engine flattens a level into
+    one composite-stratum problem for this backend (one kernel sweep per
+    level) instead of vmapping per node — vmapping a ``pallas_call`` adds
+    a grid dimension, which interpret mode handles poorly.
+    """
+
+    name = "pallas"
+    flatten_for_level = True
+
+    def counts(self, stratum, valid, num_strata):
+        from repro.kernels.stratified_stats import ops as ss_ops
+
+        stats = ss_ops.stratified_stats(
+            jnp.zeros(stratum.shape, jnp.float32), stratum, valid, num_strata,
+            impl="pallas",
+        )
+        return stats[:, 0]
+
+    def select(self, key, stratum, valid, reservoirs, num_strata, *,
+               priorities=None, max_reservoir=None, batch_hint=1):
+        from repro.kernels.sample_mask import ops as sm_ops
+
+        if priorities is None:
+            priorities = jax.random.uniform(key, (stratum.shape[0],))
+        tau = sm_ops.thresholds_from_reservoirs(
+            priorities, stratum, valid, reservoirs, num_strata
+        )
+        keep, _ = sm_ops.sample_mask(
+            priorities, stratum, valid, tau,
+            jnp.ones((num_strata,), jnp.float32), impl="pallas",
+        )
+        return keep
+
+
+_BACKENDS: dict[str, SamplerBackend] = {}
+
+
+def register_backend(backend: SamplerBackend) -> None:
+    _BACKENDS[backend.name] = backend
+
+
+register_backend(ArgsortBackend())
+register_backend(TopKBackend())
+register_backend(PallasBackend())
+
+DEFAULT_BACKEND = "argsort"
+
+
+def get_backend(backend: str | SamplerBackend) -> SamplerBackend:
+    """Resolve a backend by name (or pass an instance through)."""
+    if isinstance(backend, str):
+        try:
+            return _BACKENDS[backend]
+        except KeyError:
+            raise ValueError(
+                f"unknown sampler backend {backend!r}; "
+                f"registered: {sorted(_BACKENDS)}"
+            ) from None
+    return backend
 
 
 def merge_priority_samples(

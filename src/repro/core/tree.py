@@ -1,9 +1,30 @@
 """Hierarchy executors: the paper's logical tree, two ways.
 
-``HostTree``  — a discrete-tick emulation of the edge topology (the Kafka
+``HostTree`` — a discrete-tick emulation of the edge topology (the Kafka
 pipeline of §IV): per-node windows, asynchronous intervals, compacted
-forwarding, query + error bounds at the root. Drives the jitted node step;
-used by benchmarks/examples to reproduce Figs. 6–12.
+forwarding, query + error bounds at the root. Used by benchmarks/examples
+to reproduce Figs. 6–12. Two execution engines share identical sampling
+semantics (and identical randomness — per-node keys are derived by
+folding (tick, level, node) into the tree's base key):
+
+* ``engine="level"`` (default) — the level-vectorized engine. Each level's
+  nodes live in one ``LevelState`` of stacked buffers; a tick issues
+  exactly **one jitted dispatch per level**: WHS/SRS sampling vmapped (and
+  selection flattened into a single composite-stratum sort / kernel pass,
+  see ``whs.level_whsamp``), compaction row-wise, and child→parent routing
+  done in-graph through static scatter indices, so the host only copies
+  packed buffers. This is what keeps the host out of the hot loop at high
+  fan-in, and — because a level is now a single array program — what makes
+  sharding a level over a mesh axis a ``shard_map`` annotation rather than
+  a rewrite.
+* ``engine="loop"`` — the per-node reference engine (one jitted step per
+  node per tick, the seed implementation). Kept as the bit-exact oracle
+  for the vectorized engine and for dispatch-cost comparisons.
+
+``sampler_backend`` selects the selection engine end-to-end — ``topk``
+(``HostTree``'s default: dense partial-selection thresholds, bit-identical
+to the reference and fastest on CPU), ``argsort`` (lexsort reference), or
+``pallas`` (fused kernels); see ``core.sampling``.
 
 ``spmd_local_then_root`` — the in-graph two-level hierarchy used at pod
 scale: every device samples its local sub-streams, compacts, all-gathers
@@ -14,35 +35,104 @@ coordination beyond one all-gather of sampled data.
 from __future__ import annotations
 
 import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import error as err
+from repro.core import sampling
 from repro.core import whs
 from repro.core.types import IntervalBatch, QueryResult, StratumMeta
 
 
 # --------------------------------------------------------------------------
-# Jitted per-node interval step (shared across nodes of equal geometry).
+# Deterministic per-node keys: fold (tick, level, node) into the base key.
+# Both engines use this chain, which is what makes them bit-comparable.
+# --------------------------------------------------------------------------
+def _node_key(key, t, lvl: int, ix):
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(key, t), lvl), ix
+    )
+
+
+def _level_keys(key, t, lvl: int, n_nodes: int):
+    k = jax.random.fold_in(jax.random.fold_in(key, t), lvl)
+    return jax.vmap(
+        lambda i: jax.random.fold_in(k, i)
+    )(jnp.arange(n_nodes, dtype=jnp.uint32))
+
+
+def _child_routing(n_nodes: int, n_parents: int) -> np.ndarray:
+    """Static routing table: ``child_of[p, j]`` = index of parent ``p``'s
+    ``j``-th child (ascending), padded with the sentinel ``n_nodes``.
+    Children map to parents by ``ix % n_parents`` (the testbed wiring)."""
+    cpp = -(-n_nodes // n_parents)  # ceil
+    child_of = np.full((n_parents, cpp), n_nodes, np.int32)
+    for j in range(n_nodes):
+        child_of[j % n_parents, j // n_parents] = j
+    return child_of
+
+
+def _present_strata(strata_c, valid_c, num_strata: int):
+    """bool[n, X]: strata each node actually forwards items for (drives the
+    parent's metadata fold — a message with no items for a stratum must not
+    contribute metadata, mirroring ``Window.deliver``)."""
+    n = strata_c.shape[0]
+    node_ix = jnp.arange(n, dtype=jnp.int32)[:, None]
+    seg = jnp.where(valid_c, node_ix * num_strata + strata_c, n * num_strata)
+    cnt = jnp.zeros((n * num_strata + 1,), jnp.int32).at[
+        seg.reshape(-1)
+    ].add(1)[: n * num_strata]
+    return (cnt > 0).reshape(n, num_strata)
+
+
+def _route_pack(values_c, strata_c, valid_c, child_of: np.ndarray):
+    """In-graph child→parent routing + packing.
+
+    Gathers each parent's children (static indices), then stably packs the
+    valid items to the front of each parent row — children in child-index
+    order, items in compacted order, i.e. exactly the order the per-node
+    loop engine would deliver them in. Returns
+    ``(packed_values[P, D], packed_strata[P, D], n_delivered[P])``.
+    """
+    n, oc = values_c.shape
+    p = child_of.shape[0]
+    d = child_of.shape[1] * oc
+    vpad = jnp.concatenate([values_c, jnp.zeros((1, oc), values_c.dtype)])
+    spad = jnp.concatenate([strata_c, jnp.zeros((1, oc), strata_c.dtype)])
+    mpad = jnp.concatenate([valid_c, jnp.zeros((1, oc), bool)])
+    gather = jnp.asarray(child_of)
+    gv = vpad[gather].reshape(p, d)
+    gs = spad[gather].reshape(p, d)
+    gm = mpad[gather].reshape(p, d)
+    packed_v, packed_s, n_deliv = whs.pack_rows(gv, gs, gm, d)
+    return packed_v, packed_s, n_deliv
+
+
+# --------------------------------------------------------------------------
+# Jitted per-node steps (loop engine — the bit-exact reference).
 # --------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _node_step(capacity: int, num_strata: int, out_capacity: int, allocation: str):
+def _node_step(capacity: int, num_strata: int, out_capacity: int,
+               allocation: str, backend: str, lvl: int):
     @jax.jit
-    def step(key, values, strata, valid, w_in, c_in, sample_size):
+    def step(key, t, ix, values, strata, valid, w_in, c_in, sample_size):
+        k = _node_key(key, t, lvl, ix)
         batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
-        res = whs.whsamp(key, batch, sample_size, num_strata, allocation=allocation)
+        res = whs.whsamp(k, batch, sample_size, num_strata,
+                         allocation=allocation, backend=backend,
+                         max_reservoir=out_capacity)
         out = whs.compact_sample(batch, res, out_capacity)
-        return out.value, out.stratum, out.valid, res.meta.weight, res.meta.count, res.y
+        return (out.value, out.stratum, out.valid,
+                out.meta.weight, out.meta.count, res.y)
 
     return step
 
 
 @functools.lru_cache(maxsize=None)
-def _root_step(capacity: int, num_strata: int, allocation: str,
-               hist_bins: int = 64):
+def _root_step(capacity: int, num_strata: int, allocation: str, backend: str,
+               lvl: int, budget: int, hist_bins: int = 64):
     """Root = sampling + the user query (§III-A lines 16-20). The query here
     is the paper's evaluation workload: windowed SUM and MEAN with error
     bounds, plus a value histogram (a representative GROUP-BY aggregate —
@@ -50,9 +140,12 @@ def _root_step(capacity: int, num_strata: int, allocation: str,
     from repro.core import queries
 
     @jax.jit
-    def step(key, values, strata, valid, w_in, c_in, sample_size):
+    def step(key, t, values, strata, valid, w_in, c_in, sample_size):
+        k = _node_key(key, t, lvl, 0)
         batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
-        res = whs.whsamp(key, batch, sample_size, num_strata, allocation=allocation)
+        res = whs.whsamp(k, batch, sample_size, num_strata,
+                         allocation=allocation, backend=backend,
+                         max_reservoir=budget)
         s = err.approx_sum(batch.value, batch.stratum, res.selected, res.meta, num_strata)
         m = err.approx_mean(batch.value, batch.stratum, res.selected, res.meta, num_strata)
         lo = jnp.min(jnp.where(res.selected, batch.value, jnp.inf))
@@ -67,33 +160,37 @@ def _root_step(capacity: int, num_strata: int, allocation: str,
 
 # --- SRS baseline (§IV-B): coin-flip keep at every node, HT estimate at root.
 @functools.lru_cache(maxsize=None)
-def _srs_node_step(capacity: int, num_strata: int, out_capacity: int):
+def _srs_node_step(capacity: int, num_strata: int, out_capacity: int, lvl: int):
     from repro.core import srs
 
+    out_cap = min(out_capacity, capacity)
+
     @jax.jit
-    def step(key, values, strata, valid, w_in, c_in, p_keep):
+    def step(key, t, ix, values, strata, valid, w_in, c_in, p_keep):
+        k = _node_key(key, t, lvl, ix)
         batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
-        selected = srs.srs_select(key, batch, p_keep)
+        selected = srs.srs_select(k, batch, p_keep)
         # compact without weight bookkeeping (SRS carries no metadata)
-        order = jnp.argsort(jnp.where(selected, 0, 1), stable=True)
-        take = order[:out_capacity]
-        n_sel = jnp.sum(selected.astype(jnp.int32))
-        slot_valid = jnp.arange(out_capacity) < n_sel
-        return values[take], strata[take], slot_valid, w_in, c_in, n_sel
+        v_c, s_c, n_sel = whs.pack_rows(values[None, :], strata[None, :],
+                                        selected[None, :], out_cap)
+        slot_valid = jnp.arange(out_cap) < jnp.minimum(n_sel[0], out_cap)
+        return v_c[0], s_c[0], slot_valid, w_in, c_in, n_sel[0]
 
     return step
 
 
 @functools.lru_cache(maxsize=None)
-def _srs_root_step(capacity: int, num_strata: int, hist_bins: int = 64):
+def _srs_root_step(capacity: int, num_strata: int, lvl: int,
+                   hist_bins: int = 64):
     """Same query workload as the WHS root (fair throughput comparison):
     SUM/MEAN + histogram, with Horvitz–Thompson 1/f weights."""
     from repro.core import srs
 
     @jax.jit
-    def step(key, values, strata, valid, w_in, c_in, p_keep, f_total):
+    def step(key, t, values, strata, valid, w_in, c_in, p_keep, f_total):
+        k = _node_key(key, t, lvl, 0)
         batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
-        selected = srs.srs_select(key, batch, p_keep)
+        selected = srs.srs_select(k, batch, p_keep)
         s = srs.srs_sum(batch, selected, f_total)
         m = srs.srs_mean(batch, selected, f_total)
         lo = jnp.min(jnp.where(selected, batch.value, jnp.inf))
@@ -110,6 +207,55 @@ def _srs_root_step(capacity: int, num_strata: int, hist_bins: int = 64):
     return step
 
 
+# --------------------------------------------------------------------------
+# Jitted level steps (level-vectorized engine): one dispatch per level.
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _whs_level_step(n_nodes: int, capacity: int, num_strata: int,
+                    out_capacity: int, n_parents: int, allocation: str,
+                    backend: str, lvl: int):
+    child_of = _child_routing(n_nodes, n_parents)
+
+    @jax.jit
+    def step(key, t, values, strata, valid, w_in, c_in, sample_size):
+        keys = _level_keys(key, t, lvl, n_nodes)
+        res = whs.level_whsamp(keys, values, strata, valid, w_in, c_in,
+                               sample_size, num_strata,
+                               allocation=allocation, backend=backend,
+                               max_reservoir=out_capacity)
+        v_c, s_c, valid_c, meta = whs.level_compact(values, strata, res,
+                                                    out_capacity)
+        present = _present_strata(s_c, valid_c, num_strata)
+        packed_v, packed_s, n_deliv = _route_pack(v_c, s_c, valid_c, child_of)
+        n_fwd = jnp.sum(valid_c, axis=1, dtype=jnp.int32)
+        return (packed_v, packed_s, n_deliv,
+                meta.weight, meta.count, present, n_fwd)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _srs_level_step(n_nodes: int, capacity: int, num_strata: int,
+                    out_capacity: int, n_parents: int, lvl: int):
+    child_of = _child_routing(n_nodes, n_parents)
+    out_cap = min(out_capacity, capacity)
+
+    @jax.jit
+    def step(key, t, values, strata, valid, w_in, c_in, p_keep):
+        keys = _level_keys(key, t, lvl, n_nodes)
+        u = jax.vmap(lambda k: jax.random.uniform(k, (capacity,)))(keys)
+        selected = (u < p_keep) & valid
+        v_c, s_c, n_sel = whs.pack_rows(values, strata, selected, out_cap)
+        n_keep = jnp.minimum(n_sel, out_cap)
+        valid_c = jnp.arange(out_cap)[None, :] < n_keep[:, None]
+        present = _present_strata(s_c, valid_c, num_strata)
+        packed_v, packed_s, n_deliv = _route_pack(v_c, s_c, valid_c, child_of)
+        # SRS carries no sampler metadata: W/C sets pass through unchanged.
+        return packed_v, packed_s, n_deliv, w_in, c_in, present, n_keep
+
+    return step
+
+
 class HostTree:
     """Emulated edge topology (default geometry = the paper's testbed:
     8 sources → 4 edge nodes → 2 edge nodes → 1 root).
@@ -117,6 +263,13 @@ class HostTree:
     ``mode="whs"`` runs the paper's weighted hierarchical sampler;
     ``mode="srs"`` runs the §IV-B coin-flip baseline (per-level keep
     probability ``p_level`` so the end-to-end fraction matches WHS's).
+
+    ``engine`` selects the execution strategy (see module docstring):
+    ``"level"`` issues one jitted dispatch per level per tick,
+    ``"loop"`` one per node per tick. ``dispatch_count`` tracks jitted
+    step invocations so tests/benchmarks can verify the dispatch model.
+    ``sampler_backend`` is threaded through to every WHSamp call.
+
     Per-level processing wall-time is accumulated in ``level_time_s``
     (drives the Fig. 9/10 latency model)."""
 
@@ -131,49 +284,75 @@ class HostTree:
         seed: int = 0,
         mode: str = "whs",                # whs | srs
         fraction: float | None = None,    # srs: end-to-end sampling fraction
+        engine: str = "level",            # level | loop
+        # topk is bit-identical to the argsort reference (see core.sampling)
+        # and ~1.7x faster on CPU — the tree defaults to it; the library
+        # functions keep the argsort reference as their default.
+        sampler_backend: str = "topk",
     ):
-        from repro.core.window import Window
+        from repro.core.window import LevelState, Window
 
         assert fanin[-1] == 1, "last level must be the single root"
         assert mode in ("whs", "srs")
+        assert engine in ("level", "loop")
         self.fanin = fanin
         self.num_strata = num_strata
         self.allocation = allocation
         self.sample_sizes = sample_sizes
         self.mode = mode
+        self.engine = engine
+        self.sampler_backend = sampler_backend
         self.fraction = fraction
         # SRS keeps items with the same probability at every level so the
         # compounded keep-rate equals the end-to-end ``fraction``.
         self.p_level = (float(fraction) ** (1.0 / len(fanin))
                         if fraction is not None else 1.0)
         interval_ticks = interval_ticks or [1] * len(fanin)
-        self.levels: list[list[Window]] = []
+        self.capacities: list[int] = []
         cap = capacity
         for lvl, n_nodes in enumerate(fanin):
-            self.levels.append([Window(cap, num_strata, interval_ticks[lvl]) for _ in range(n_nodes)])
+            self.capacities.append(cap)
             if lvl + 1 < len(fanin):
                 # Next level's buffer: every child may forward a full budget
                 # per interval; 2x slack absorbs interval misalignment (§III-C).
                 children_per_parent = -(-n_nodes // fanin[lvl + 1])  # ceil
                 cap = max(2 * sample_sizes[lvl] * children_per_parent, 64)
-        self._rng = np.random.default_rng(seed)
+        if engine == "loop":
+            self.levels = [
+                [Window(self.capacities[lvl], num_strata, interval_ticks[lvl])
+                 for _ in range(n_nodes)]
+                for lvl, n_nodes in enumerate(fanin)
+            ]
+        else:
+            self.levels = [
+                LevelState(n_nodes, self.capacities[lvl], num_strata,
+                           interval_ticks[lvl])
+                for lvl, n_nodes in enumerate(fanin)
+            ]
         self._key = jax.random.PRNGKey(seed)
         self.items_forwarded = [0] * len(fanin)   # bandwidth accounting (Fig. 8)
         self.items_ingested = 0
         self.level_time_s = [0.0] * len(fanin)    # processing time (Fig. 9/10)
+        self.dispatch_count = 0                   # jitted step invocations
         self.results: list[dict] = []
-
-    def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
 
     def ingest(self, node: int, values: np.ndarray, strata: np.ndarray) -> None:
         """Source → level-0 node delivery."""
         self.items_ingested += len(values)
-        self.levels[0][node].deliver(values, strata)
+        if self.engine == "loop":
+            self.levels[0][node].deliver(values, strata)
+        else:
+            self.levels[0].deliver(node, values, strata)
 
     def tick(self, t: int) -> None:
         """Advance one global tick: flush every due window, push upstream."""
+        if self.engine == "loop":
+            self._tick_loop(t)
+        else:
+            self._tick_level(t)
+
+    # ------------------------------------------------------------- loop --
+    def _tick_loop(self, t: int) -> None:
         import time as _time
 
         for lvl, nodes in enumerate(self.levels):
@@ -183,21 +362,22 @@ class HostTree:
                 if not win.due(t) or win.fill == 0:
                     continue
                 values, strata, valid, w_in, c_in = win.flush()
-                key = self._next_key()
                 t0 = _time.perf_counter()
                 if is_root:
                     if self.mode == "srs":
-                        step = _srs_root_step(win.capacity, self.num_strata)
+                        step = _srs_root_step(win.capacity, self.num_strata, lvl)
                         se, sv, me, mv, nsel, hist = step(
-                            key, values, strata, valid, w_in, c_in,
+                            self._key, t, values, strata, valid, w_in, c_in,
                             jnp.float32(self.p_level), jnp.float32(self.fraction))
-                        hist = np.asarray(hist)
                     else:
-                        step = _root_step(win.capacity, self.num_strata, self.allocation)
+                        step = _root_step(win.capacity, self.num_strata,
+                                          self.allocation, self.sampler_backend,
+                                          lvl, int(self.sample_sizes[lvl]))
                         se, sv, me, mv, nsel, hist = step(
-                            key, values, strata, valid, w_in, c_in,
+                            self._key, t, values, strata, valid, w_in, c_in,
                             jnp.float32(self.sample_sizes[lvl]))
-                        hist = np.asarray(hist)
+                    self.dispatch_count += 1
+                    hist = np.asarray(hist)
                     se = float(se)
                     self.level_time_s[lvl] += _time.perf_counter() - t0
                     self.results.append(dict(
@@ -208,22 +388,87 @@ class HostTree:
                 else:
                     out_cap = self.sample_sizes[lvl]
                     if self.mode == "srs":
-                        step = _srs_node_step(win.capacity, self.num_strata, out_cap)
+                        step = _srs_node_step(win.capacity, self.num_strata,
+                                              out_cap, lvl)
                         ov, os_, oval, w_out, c_out, _ = step(
-                            key, values, strata, valid, w_in, c_in,
+                            self._key, t, ix, values, strata, valid, w_in, c_in,
                             jnp.float32(self.p_level))
                     else:
                         step = _node_step(win.capacity, self.num_strata, out_cap,
-                                          self.allocation)
+                                          self.allocation, self.sampler_backend,
+                                          lvl)
                         ov, os_, oval, w_out, c_out, _ = step(
-                            key, values, strata, valid, w_in, c_in,
+                            self._key, t, ix, values, strata, valid, w_in, c_in,
                             jnp.float32(self.sample_sizes[lvl]))
+                    self.dispatch_count += 1
                     ov, os_, oval = np.asarray(ov), np.asarray(os_), np.asarray(oval)
                     self.level_time_s[lvl] += _time.perf_counter() - t0
                     n = int(oval.sum())
                     self.items_forwarded[lvl] += n
                     parent = self.levels[lvl + 1][ix % n_parents]
                     parent.deliver(ov[:n], os_[:n], np.asarray(w_out), np.asarray(c_out))
+
+    # ------------------------------------------------------------ level --
+    def _tick_level(self, t: int) -> None:
+        import time as _time
+
+        for lvl, state in enumerate(self.levels):
+            is_root = lvl == len(self.levels) - 1
+            if not state.due(t) or int(state.fill.sum()) == 0:
+                continue
+            values, strata, valid, w_in, c_in = state.flush_all()
+            t0 = _time.perf_counter()
+            if is_root:
+                # The root is always a single node: squeeze the node axis and
+                # run the (shared) scalar root step — still one dispatch.
+                if self.mode == "srs":
+                    step = _srs_root_step(state.capacity, self.num_strata, lvl)
+                    se, sv, me, mv, nsel, hist = step(
+                        self._key, t, values[0], strata[0], valid[0],
+                        w_in[0], c_in[0],
+                        jnp.float32(self.p_level), jnp.float32(self.fraction))
+                else:
+                    step = _root_step(state.capacity, self.num_strata,
+                                      self.allocation, self.sampler_backend,
+                                      lvl, int(self.sample_sizes[lvl]))
+                    se, sv, me, mv, nsel, hist = step(
+                        self._key, t, values[0], strata[0], valid[0],
+                        w_in[0], c_in[0],
+                        jnp.float32(self.sample_sizes[lvl]))
+                self.dispatch_count += 1
+                hist = np.asarray(hist)
+                se = float(se)
+                self.level_time_s[lvl] += _time.perf_counter() - t0
+                self.results.append(dict(
+                    tick=t, sum=se, sum_var=float(sv),
+                    mean=float(me), mean_var=float(mv), n_sampled=int(nsel),
+                    histogram=hist,
+                ))
+            else:
+                n_parents = self.fanin[lvl + 1]
+                out_cap = self.sample_sizes[lvl]
+                if self.mode == "srs":
+                    step = _srs_level_step(state.n_nodes, state.capacity,
+                                           self.num_strata, out_cap,
+                                           n_parents, lvl)
+                    outs = step(self._key, t, values, strata, valid, w_in, c_in,
+                                jnp.float32(self.p_level))
+                else:
+                    step = _whs_level_step(state.n_nodes, state.capacity,
+                                           self.num_strata, out_cap, n_parents,
+                                           self.allocation,
+                                           self.sampler_backend, lvl)
+                    outs = step(self._key, t, values, strata, valid, w_in, c_in,
+                                jnp.float32(self.sample_sizes[lvl]))
+                self.dispatch_count += 1
+                (packed_v, packed_s, n_deliv,
+                 w_out, c_out, present, n_fwd) = (np.asarray(o) for o in outs)
+                self.level_time_s[lvl] += _time.perf_counter() - t0
+                self.items_forwarded[lvl] += int(n_fwd.sum())
+                parent = self.levels[lvl + 1]
+                parent.deliver_packed(packed_v, packed_s, n_deliv)
+                parent_ix = np.arange(state.n_nodes) % n_parents
+                parent.fold_meta(parent_ix, present, w_out, c_out)
 
 
 # --------------------------------------------------------------------------
@@ -238,6 +483,7 @@ def spmd_local_then_root(
     local_budget: int,
     root_budget: int,
     allocation: str = "fair",
+    sampler_backend: str = sampling.DEFAULT_BACKEND,
 ) -> tuple[QueryResult, QueryResult]:
     """Two-level hierarchical sampling across a mesh axis.
 
@@ -248,13 +494,18 @@ def spmd_local_then_root(
 
     Call under ``shard_map`` with ``axis_name`` bound, e.g. the "data"
     axis; every device computes the root stage redundantly (no single
-    point of failure, no coordination — §III-E).
+    point of failure, no coordination — §III-E). ``sampler_backend``
+    selects the selection engine at both stages; with ``"pallas"`` the
+    enclosing ``shard_map`` must pass ``check_rep=False`` (JAX has no
+    replication rule for ``pallas_call``).
     """
     # Local stage: per-device key. Root stage: the SAME key on every device
     # so the redundantly-computed root result is bit-identical (replicated).
     k_local = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
     k_root = jax.random.fold_in(key, 0x5F3759DF)
-    res = whs.whsamp(k_local, batch, jnp.float32(local_budget), num_strata, allocation=allocation)
+    res = whs.whsamp(k_local, batch, jnp.float32(local_budget), num_strata,
+                     allocation=allocation, backend=sampler_backend,
+                     max_reservoir=local_budget)
     compact = whs.compact_sample(batch, res, local_budget)
 
     g_val = jax.lax.all_gather(compact.value, axis_name, tiled=True)
@@ -274,7 +525,8 @@ def spmd_local_then_root(
 
     root_batch = IntervalBatch(g_val, g_str, g_vld, StratumMeta(g_w, g_c))
     res_root = whs.whsamp(k_root, root_batch, jnp.float32(root_budget), num_strata,
-                          allocation=allocation)
+                          allocation=allocation, backend=sampler_backend,
+                          max_reservoir=root_budget)
     s = err.approx_sum(root_batch.value, root_batch.stratum, res_root.selected,
                        res_root.meta, num_strata)
     m = err.approx_mean(root_batch.value, root_batch.stratum, res_root.selected,

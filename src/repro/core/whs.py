@@ -14,6 +14,29 @@ from repro.core import sampling
 from repro.core.types import IntervalBatch, SampleResult, StratumMeta
 
 
+def _whs_meta(c, reservoirs, w_in, c_in, async_calibration):
+    """Alg. 2 lines 12–20 weight/count update — shared by the per-node and
+    level-vectorized paths (pure elementwise, any leading batch shape)."""
+    y = jnp.minimum(c, jnp.maximum(reservoirs, 0.0))
+    safe_n = jnp.maximum(reservoirs, 1.0)
+    w_local = jnp.where(c > reservoirs, c / safe_n, 1.0)
+
+    if async_calibration:
+        # Eq. 9: calibrate by C^in / c — corrects the α bias when the
+        # downstream node's interval straddles ours. C^in == 0 marks a
+        # source stream (no downstream node): factor 1.
+        calib = jnp.where((c_in > 0.0) & (c > 0.0), c_in / jnp.maximum(c, 1.0), 1.0)
+    else:
+        calib = jnp.ones_like(c)
+
+    w_out = w_in * w_local * calib
+    # Strata absent this interval keep their previous weight (§III-C: a node
+    # maintains the most recent sets and only updates on arrival).
+    w_out = jnp.where(c > 0.0, w_out, w_in)
+    c_out = jnp.where(c > 0.0, y, c_in)
+    return y, StratumMeta(weight=w_out, count=c_out)
+
+
 def whsamp(
     key: jax.Array,
     batch: IntervalBatch,
@@ -22,6 +45,8 @@ def whsamp(
     *,
     allocation: str = "fair",
     async_calibration: bool = True,
+    backend: str | sampling.SamplerBackend = sampling.DEFAULT_BACKEND,
+    max_reservoir: int | None = None,
 ) -> SampleResult:
     """Run WHSamp over one interval batch.
 
@@ -35,39 +60,87 @@ def whsamp(
     plain Eq. 1 update. At a source node ``W^in = 1`` and ``C^in = 0``
     (sentinel meaning "no downstream sampler"), so the calibration factor
     is forced to 1.
+
+    ``backend`` picks the selection engine (``argsort`` | ``topk`` |
+    ``pallas``, see ``core.sampling``); all backends realize the same
+    output law. ``max_reservoir`` is an optional static bound on every
+    ``N_i`` (callers that know the interval budget statically should pass
+    it — the ``topk`` backend uses it to size its partial selection).
     """
-    c = sampling.stratum_counts(batch.stratum, batch.valid, num_strata)
+    be = sampling.get_backend(backend)
+    c = be.counts(batch.stratum, batch.valid, num_strata)
     reservoirs = sampling.allocate_reservoirs(sample_size, c, policy=allocation)
-    selected = sampling.stratified_priority_sample(
-        key, batch.stratum, batch.valid, reservoirs, num_strata
+    # Priorities are drawn here (not inside the backend) so every backend —
+    # and the level-vectorized path — sees identical randomness per key.
+    priorities = jax.random.uniform(key, (batch.capacity,))
+    selected = be.select(
+        key, batch.stratum, batch.valid, reservoirs, num_strata,
+        priorities=priorities, max_reservoir=max_reservoir,
     )
-    y = jnp.minimum(c, jnp.maximum(reservoirs, 0.0))
-
-    safe_n = jnp.maximum(reservoirs, 1.0)
-    w_local = jnp.where(c > reservoirs, c / safe_n, 1.0)
-
-    if async_calibration:
-        # Eq. 9: calibrate by C^in / c — corrects the α bias when the
-        # downstream node's interval straddles ours. C^in == 0 marks a
-        # source stream (no downstream node): factor 1.
-        calib = jnp.where(
-            (batch.meta.count > 0.0) & (c > 0.0), batch.meta.count / jnp.maximum(c, 1.0), 1.0
-        )
-    else:
-        calib = jnp.ones_like(c)
-
-    w_out = batch.meta.weight * w_local * calib
-    # Strata absent this interval keep their previous weight (§III-C: a node
-    # maintains the most recent sets and only updates on arrival).
-    w_out = jnp.where(c > 0.0, w_out, batch.meta.weight)
-    c_out = jnp.where(c > 0.0, y, batch.meta.count)
-
+    y, meta = _whs_meta(c, reservoirs, batch.meta.weight, batch.meta.count,
+                        async_calibration)
     return SampleResult(
-        selected=selected,
-        meta=StratumMeta(weight=w_out, count=c_out),
-        c=c,
-        y=y,
-        reservoir=reservoirs,
+        selected=selected, meta=meta, c=c, y=y, reservoir=reservoirs,
+    )
+
+
+def level_whsamp(
+    keys: jax.Array,
+    values: jnp.ndarray,
+    strata: jnp.ndarray,
+    valid: jnp.ndarray,
+    w_in: jnp.ndarray,
+    c_in: jnp.ndarray,
+    sample_size: jnp.ndarray,
+    num_strata: int,
+    *,
+    allocation: str = "fair",
+    async_calibration: bool = True,
+    backend: str | sampling.SamplerBackend = sampling.DEFAULT_BACKEND,
+    max_reservoir: int | None = None,
+) -> SampleResult:
+    """WHSamp over a whole hierarchy level in one array program.
+
+    Inputs are stacked over the node axis: ``values/strata/valid`` are
+    ``[n_nodes, cap]``, ``w_in/c_in`` are ``[n_nodes, X]``, ``keys`` is one
+    PRNG key per node. Per-node arithmetic (counts, reservoir allocation,
+    weight update) is vmapped. Selection runs as one batched program per
+    level: vmapped over the node axis by default (XLA batches the sorts /
+    top-k), or — for backends with ``flatten_for_level`` (pallas) —
+    flattened into a single composite-stratum problem (stratum' = node·X +
+    stratum) so the kernel makes exactly one pass over the level's items.
+    Results are bit-identical to ``whsamp`` per node with the same
+    per-node keys.
+    """
+    n_nodes, cap = values.shape
+    be = sampling.get_backend(backend)
+
+    node_ix = jnp.arange(n_nodes, dtype=jnp.int32)[:, None]
+    comp = (node_ix * num_strata + strata).reshape(-1)
+    flat_valid = valid.reshape(-1)
+
+    c = be.counts(comp, flat_valid, n_nodes * num_strata)
+    c = c.reshape(n_nodes, num_strata)
+    reservoirs = jax.vmap(
+        lambda ci: sampling.allocate_reservoirs(sample_size, ci, policy=allocation)
+    )(c)
+    priorities = jax.vmap(lambda k: jax.random.uniform(k, (cap,)))(keys)
+    if getattr(be, "flatten_for_level", False):
+        selected = be.select(
+            keys[0], comp, flat_valid, reservoirs.reshape(-1),
+            n_nodes * num_strata, priorities=priorities.reshape(-1),
+            max_reservoir=max_reservoir,
+        ).reshape(n_nodes, cap)
+    else:
+        selected = jax.vmap(
+            lambda k, s, v, r, p: be.select(
+                k, s, v, r, num_strata, priorities=p,
+                max_reservoir=max_reservoir, batch_hint=n_nodes)
+        )(keys, strata, valid, reservoirs, priorities)
+
+    y, meta = _whs_meta(c, reservoirs, w_in, c_in, async_calibration)
+    return SampleResult(
+        selected=selected, meta=meta, c=c, y=y, reservoir=reservoirs,
     )
 
 
@@ -86,6 +159,59 @@ def apply_sample(batch: IntervalBatch, result: SampleResult) -> IntervalBatch:
     )
 
 
+def pack_rows(
+    values: jnp.ndarray,
+    strata: jnp.ndarray,
+    keep: jnp.ndarray,
+    out_capacity: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Row-wise O(M) compaction: pack each row's kept items to the front.
+
+    ``values/strata/keep`` are ``[n, cap]``; returns ``[n, out_capacity]``
+    buffers (kept items in original buffer order, overflow dropped) plus
+    the per-row kept counts. One cumsum + one scatter instead of a
+    per-row O(M log M) sort — this runs on every hop of every tick.
+    """
+    n, _ = values.shape
+    dest = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    row = jnp.arange(n, dtype=jnp.int32)[:, None]
+    ok = keep & (dest < out_capacity)
+    idx = jnp.where(ok, row * out_capacity + dest, n * out_capacity).reshape(-1)
+    values_c = jnp.zeros((n * out_capacity,), values.dtype).at[idx].set(
+        values.reshape(-1), mode="drop").reshape(n, out_capacity)
+    strata_c = jnp.zeros((n * out_capacity,), strata.dtype).at[idx].set(
+        strata.reshape(-1), mode="drop").reshape(n, out_capacity)
+    return values_c, strata_c, jnp.sum(keep, axis=1, dtype=jnp.int32)
+
+
+def _truncation_corrected_meta(
+    slot_valid: jnp.ndarray,
+    result_y: jnp.ndarray,
+    meta: StratumMeta,
+    seg: jnp.ndarray,
+    num_segments: int,
+) -> StratumMeta:
+    """Re-derive (W^out, C^out) from what actually fits in the out buffer.
+
+    When every selected item fits (the provisioned case: ``Σ Y_i ≤
+    out_capacity`` by construction of ``allocate_reservoirs``), kept == Y
+    and this is an exact no-op (factor ``Y/Y == 1.0``). If the buffer *is*
+    too small, dropping items without correction would bias every upstream
+    estimate low; instead the extra thinning is folded into the weights
+    (``W·Y/kept``) and ``C^out`` is set to the kept count so Eq. 9's
+    ``C^in/c`` calibration at the parent stays consistent with the items
+    it actually receives.
+    """
+    kept = jnp.zeros((num_segments + 1,), jnp.float32).at[
+        jnp.where(slot_valid, seg, num_segments).reshape(-1)
+    ].add(1.0)[:num_segments].reshape(meta.weight.shape)
+    factor = jnp.where(kept > 0.0, result_y / jnp.maximum(kept, 1.0), 1.0)
+    return StratumMeta(
+        weight=meta.weight * factor,
+        count=jnp.where(kept > 0.0, kept, meta.count),
+    )
+
+
 def compact_sample(
     batch: IntervalBatch, result: SampleResult, out_capacity: int
 ) -> IntervalBatch:
@@ -94,15 +220,52 @@ def compact_sample(
     This is the bandwidth saving of the paper (Fig. 8): a node forwards
     ``Σ_i Y_i ≤ sample_size`` items upstream, not the whole interval.
     Deterministic gather via sort-by-(!selected) keeps everything static.
+    Should ``out_capacity`` be smaller than the number of selected items,
+    the overflow is weight-corrected rather than silently dropped (see
+    ``_truncation_corrected_meta``).
     """
-    m = batch.capacity
-    order = jnp.argsort(jnp.where(result.selected, 0, 1), stable=True)
-    take = order[:out_capacity]
-    n_sel = jnp.sum(result.selected.astype(jnp.int32))
-    slot_valid = jnp.arange(out_capacity) < n_sel
-    return IntervalBatch(
-        value=batch.value[take],
-        stratum=batch.stratum[take],
-        valid=slot_valid,
-        meta=result.meta,
+    num_strata = result.meta.weight.shape[0]
+    # A node can never forward more items than its buffer holds: a budget
+    # larger than the capacity (possible for SRS's provisioning formula)
+    # degenerates to "forward everything selected".
+    out_capacity = min(out_capacity, batch.capacity)
+    values_c, strata_c, n_sel = pack_rows(
+        batch.value[None, :], batch.stratum[None, :],
+        result.selected[None, :], out_capacity)
+    slot_valid = jnp.arange(out_capacity) < jnp.minimum(n_sel[0], out_capacity)
+    meta = _truncation_corrected_meta(
+        slot_valid, result.y, result.meta, strata_c[0], num_strata
     )
+    return IntervalBatch(
+        value=values_c[0],
+        stratum=strata_c[0],
+        valid=slot_valid,
+        meta=meta,
+    )
+
+
+def level_compact(
+    values: jnp.ndarray,
+    strata: jnp.ndarray,
+    result: SampleResult,
+    out_capacity: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, StratumMeta]:
+    """``compact_sample`` over a stacked level: ``[n_nodes, cap]`` buffers →
+    ``[n_nodes, out_capacity]`` forwarding buffers + corrected meta sets.
+
+    Row-wise stable sort keeps each node's items in buffer order, so the
+    packed output is bit-identical to running ``compact_sample`` per node.
+    """
+    n_nodes, cap = values.shape
+    num_strata = result.meta.weight.shape[-1]
+    out_capacity = min(out_capacity, cap)
+    values_c, strata_c, n_sel = pack_rows(values, strata, result.selected,
+                                          out_capacity)
+    n_keep = jnp.minimum(n_sel, out_capacity)
+    slot_valid = jnp.arange(out_capacity)[None, :] < n_keep[:, None]
+    node_ix = jnp.arange(n_nodes, dtype=jnp.int32)[:, None]
+    meta = _truncation_corrected_meta(
+        slot_valid, result.y, result.meta,
+        node_ix * num_strata + strata_c, n_nodes * num_strata,
+    )
+    return values_c, strata_c, slot_valid, meta

@@ -22,6 +22,13 @@ semantics live):
   EXPERIMENTS.md. The count-weighted mean is the unbiased merge.)
 * Across intervals the sets are **sticky** (§III-C, Fig. 3): items that
   arrive before their metadata use the most recent saved ``W^in``/``C^in``.
+
+Two implementations share these semantics:
+
+* ``Window``     — one node's buffer (the per-node loop engine).
+* ``LevelState`` — every node of a level stacked into ``[n_nodes, ...]``
+  arrays, so the level-vectorized engine can flush a whole level into one
+  jitted dispatch and fold a level step's outputs back in bulk.
 """
 from __future__ import annotations
 
@@ -77,6 +84,117 @@ class Window:
         the rest fall back to the sticky values (§III-C)."""
         valid = np.zeros((self.capacity,), bool)
         valid[: self.fill] = True
+        w_merged = self._wc_acc / np.maximum(self._c_acc, 1.0)
+        w_eff = np.where(self._seen, w_merged, self.w_in).astype(np.float32)
+        c_eff = np.where(self._seen, self._c_acc, self.c_in).astype(np.float32)
+        self.w_in, self.c_in = w_eff, c_eff  # refresh stickies
+        out = (self.values.copy(), self.strata.copy(), valid,
+               w_eff.copy(), c_eff.copy())
+        self._reset()
+        return out
+
+
+class LevelState:
+    """Stacked windows for all nodes of one hierarchy level.
+
+    Same interval semantics as ``Window`` (count-sum / count-weighted-mean
+    metadata merge, sticky fallback), but held as ``[n_nodes, ...]`` arrays
+    so one flush feeds one jitted level step, and the step's per-parent
+    packed outputs fold back without per-item host work. Within a level all
+    nodes share one interval length (§IV's topology), which is what makes
+    the stacked flush legal.
+    """
+
+    def __init__(self, n_nodes: int, capacity: int, num_strata: int,
+                 interval_ticks: int):
+        self.n_nodes = int(n_nodes)
+        self.capacity = int(capacity)
+        self.num_strata = int(num_strata)
+        self.interval_ticks = int(interval_ticks)
+        # Sticky sets: most recent effective W^in / C^in per node × stratum.
+        self.w_in = np.ones((self.n_nodes, self.num_strata), np.float32)
+        self.c_in = np.zeros((self.n_nodes, self.num_strata), np.float32)
+        self._reset()
+
+    def _reset(self) -> None:
+        n, cap, x = self.n_nodes, self.capacity, self.num_strata
+        self.values = np.zeros((n, cap), np.float32)
+        self.strata = np.zeros((n, cap), np.int32)
+        self.fill = np.zeros((n,), np.int64)
+        self.dropped = np.zeros((n,), np.int64)
+        # This-interval metadata accumulators: Σ w·C and Σ C per stratum.
+        self._wc_acc = np.zeros((n, x), np.float64)
+        self._c_acc = np.zeros((n, x), np.float64)
+        self._seen = np.zeros((n, x), bool)
+
+    def deliver(self, node: int, values: np.ndarray, strata: np.ndarray,
+                weight: np.ndarray | None = None,
+                count: np.ndarray | None = None) -> None:
+        """Append items to one node; fold the message's W/C sets in."""
+        if weight is not None and count is not None:
+            present = np.zeros((self.num_strata,), bool)
+            present[np.unique(strata)] = True
+            w = weight.astype(np.float64)
+            c = count.astype(np.float64)
+            self._wc_acc[node] = np.where(
+                present, self._wc_acc[node] + w * c, self._wc_acc[node])
+            self._c_acc[node] = np.where(
+                present, self._c_acc[node] + c, self._c_acc[node])
+            self._seen[node] |= present
+        n = len(values)
+        take = min(n, self.capacity - int(self.fill[node]))
+        if take < n:
+            self.dropped[node] += n - take  # backpressure accounting
+        f = int(self.fill[node])
+        self.values[node, f:f + take] = values[:take]
+        self.strata[node, f:f + take] = strata[:take]
+        self.fill[node] += take
+
+    def deliver_packed(self, packed_values: np.ndarray,
+                       packed_strata: np.ndarray,
+                       counts: np.ndarray) -> None:
+        """Fold a level step's per-parent packed items into the buffers.
+
+        ``packed_values/strata`` are ``[n_nodes, D]`` with each row's first
+        ``counts[p]`` slots holding real items (children concatenated in
+        child-index order — the same order the loop engine delivers in).
+        """
+        for p in range(self.n_nodes):
+            n = int(counts[p])
+            take = min(n, self.capacity - int(self.fill[p]))
+            if take < n:
+                self.dropped[p] += n - take
+            f = int(self.fill[p])
+            self.values[p, f:f + take] = packed_values[p, :take]
+            self.strata[p, f:f + take] = packed_strata[p, :take]
+            self.fill[p] += take
+
+    def fold_meta(self, parent_ix: np.ndarray, present: np.ndarray,
+                  weight: np.ndarray, count: np.ndarray) -> None:
+        """Fold per-child (W^out, C^out) messages into parent accumulators.
+
+        ``parent_ix[j]`` is the parent of child ``j``; ``present[j, x]``
+        marks strata child ``j`` actually forwarded items for (a message
+        with no items for a stratum contributes no metadata — exactly
+        ``Window.deliver``'s ``np.unique`` rule). float64 accumulation in
+        child order keeps this bit-identical to per-message delivery.
+        """
+        w = weight.astype(np.float64)
+        c = count.astype(np.float64)
+        np.add.at(self._wc_acc, parent_ix, np.where(present, w * c, 0.0))
+        np.add.at(self._c_acc, parent_ix, np.where(present, c, 0.0))
+        np.logical_or.at(self._seen, parent_ix, present)
+
+    def due(self, tick: int) -> bool:
+        return tick % self.interval_ticks == 0
+
+    def flush_all(self):
+        """Return stacked (values, strata, valid, w_in, c_in); reset.
+
+        Semantics per node match ``Window.flush``: fresh metadata wins,
+        otherwise sticky values survive (§III-C).
+        """
+        valid = np.arange(self.capacity)[None, :] < self.fill[:, None]
         w_merged = self._wc_acc / np.maximum(self._c_acc, 1.0)
         w_eff = np.where(self._seen, w_merged, self.w_in).astype(np.float32)
         c_eff = np.where(self._seen, self._c_acc, self.c_in).astype(np.float32)

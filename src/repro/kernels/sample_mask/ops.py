@@ -31,10 +31,11 @@ def thresholds_from_reservoirs(
 ) -> jnp.ndarray:
     """Exact τ[X]: N_i-th largest valid priority per stratum (−inf if c≤N)."""
     m = priorities.shape[0]
-    seg = jnp.where(valid, strata, num_strata).astype(jnp.float32)
-    sort_key = seg * 2.0 + (1.0 - jnp.where(valid, priorities, -0.5))
-    order = jnp.argsort(sort_key)
-    seg_sorted = jnp.where(valid, strata, num_strata)[order]
+    seg = jnp.where(valid, strata, num_strata)
+    # Lexicographic [stratum asc, priority desc]: full-precision priority
+    # ordering regardless of how many strata there are (a packed single
+    # float key loses priority bits as the stratum id grows).
+    order = jnp.lexsort((jnp.where(valid, -priorities, 0.5), seg))
     counts = jnp.zeros((num_strata + 2,), jnp.int32).at[
         jnp.where(valid, strata, num_strata)
     ].add(1)
@@ -44,9 +45,13 @@ def thresholds_from_reservoirs(
     # Index of the N_i-th largest element of stratum i in sorted order.
     idx = starts[:num_strata] + jnp.clip(n_int - 1, 0, jnp.maximum(c_int - 1, 0))
     tau = priorities[order][jnp.clip(idx, 0, m - 1)]
-    # keep-everything sentinel is -1.0 (priorities ∈ [0,1)): finite, so the
-    # kernel's one-hot·τ matmul stays NaN-free (0·(−inf) would poison it).
-    return jnp.where(c_int > n_int, tau, -1.0)
+    # Sentinels are finite so the kernel's one-hot·τ matmul stays NaN-free
+    # (0·(±inf) would poison it); priorities live in [0, 1):
+    #   keep-everything (c ≤ N)  → −1.0   (every valid item passes u ≥ τ)
+    #   keep-nothing   (N ≤ 0)   → +2.0   (no priority can reach it; without
+    #     this, the clipped idx would return the stratum's max priority and
+    #     the threshold pass would keep one item where the rank pass keeps 0)
+    return jnp.where(n_int <= 0, 2.0, jnp.where(c_int > n_int, tau, -1.0))
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

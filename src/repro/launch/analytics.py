@@ -38,7 +38,8 @@ ITEM_BYTES = 16                     # value + stratum tag + framing
 
 def build_tree(num_strata: int, capacity: int, fraction: float,
                fanin=(4, 2, 1), interval_ticks=None, allocation="fair",
-               seed: int = 0, mode: str = "whs") -> HostTree:
+               seed: int = 0, mode: str = "whs", engine: str = "level",
+               sampler_backend: str = "topk") -> HostTree:
     if mode == "srs":
         # Coin-flip keeps ~p_level of arrivals at each node. A level-l node
         # receives fanin[0]·capacity·p^l / fanin[l] items (fan-in
@@ -54,12 +55,14 @@ def build_tree(num_strata: int, capacity: int, fraction: float,
     return HostTree(
         fanin=list(fanin), num_strata=num_strata, capacity=capacity,
         sample_sizes=sizes, interval_ticks=interval_ticks,
-        allocation=allocation, seed=seed, mode=mode, fraction=fraction)
+        allocation=allocation, seed=seed, mode=mode, fraction=fraction,
+        engine=engine, sampler_backend=sampler_backend)
 
 
 def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = None,
                  num_sources: int = 8, fanin=(4, 2, 1), interval_ticks=None,
                  allocation: str = "fair", seed: int = 0, mode: str = "whs",
+                 engine: str = "level", sampler_backend: str = "topk",
                  warmup_ticks: int = 0):
     """Stream → tree → per-window results + ground truth. Returns a dict.
 
@@ -77,7 +80,8 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
         iv0 = (interval_ticks or [1])[0]
         capacity = max(int(1.35 * per_node_rate * iv0) + 256 & ~255, 1024)
     tree = build_tree(len(specs), capacity, fraction, fanin,
-                      interval_ticks, allocation, seed, mode)
+                      interval_ticks, allocation, seed, mode,
+                      engine, sampler_backend)
     sources = [S.StreamSource(specs, seed=seed * 977 + i)
                for i in range(num_sources)]
     for t in range(1, warmup_ticks + 1):
@@ -90,6 +94,7 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
     tree.items_ingested = 0
     tree.items_forwarded = [0] * len(tree.fanin)
     tree.level_time_s = [0.0] * len(tree.fanin)
+    tree.dispatch_count = 0
 
     exact_sum = 0.0
     exact_cnt = 0
@@ -131,6 +136,9 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
     return {
         "fraction": fraction,
         "mode": mode,
+        "engine": engine,
+        "sampler_backend": sampler_backend,
+        "dispatches": tree.dispatch_count,
         "approx_sum": approx_sum,
         "exact_sum": exact_sum,
         "bound_2sigma": bound,
@@ -160,6 +168,15 @@ def main(argv=None):
     ap.add_argument("--allocation", default="fair",
                     choices=["fair", "proportional"])
     ap.add_argument("--mode", default="whs", choices=["whs", "srs"])
+    ap.add_argument("--engine", default="level", choices=["level", "loop"],
+                    help="level = one jitted dispatch per level per tick; "
+                         "loop = per-node reference engine")
+    ap.add_argument("--backend", default="topk",
+                    choices=["argsort", "topk", "pallas"],
+                    help="sampler selection backend: argsort = lexsort "
+                         "reference, topk = dense partial-selection "
+                         "thresholds, pallas = fused kernels (interpret "
+                         "mode off-TPU)")
     args = ap.parse_args(argv)
 
     specs = {
@@ -172,14 +189,17 @@ def main(argv=None):
     }[args.dist]
     r = run_pipeline(specs, fraction=args.fraction, ticks=args.ticks,
                      allocation=args.allocation, mode=args.mode,
+                     engine=args.engine, sampler_backend=args.backend,
                      warmup_ticks=2)
-    print(f"dist={args.dist} mode={args.mode} fraction={r['fraction']:.0%}")
+    print(f"dist={args.dist} mode={args.mode} engine={args.engine} "
+          f"backend={args.backend} fraction={r['fraction']:.0%}")
     print(f"  SUM ≈ {r['approx_sum']:.4e} ± {r['bound_2sigma']:.2e} "
           f"(exact {r['exact_sum']:.4e}; within 2σ: {r['within_2sigma']})")
     print(f"  accuracy loss  {r['accuracy_loss']:.5%}")
     print(f"  bandwidth kept {r['bandwidth_fraction']:.1%} of ingested items")
     print(f"  throughput     {r['throughput_items_s']:.0f} items/s "
-          f"({r['items_ingested']} items, {r['windows']} windows)")
+          f"({r['items_ingested']} items, {r['windows']} windows, "
+          f"{r['dispatches']} jitted dispatches)")
     print(f"  latency        {r['latency_s'] * 1e3:.1f} ms/window "
           f"(+{r['latency_window_ticks']:.1f} tick window wait)")
     return r

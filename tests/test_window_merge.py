@@ -6,6 +6,9 @@ represented-item total Σ wₖCₖ — and (c) fall back to sticky values for
 strata with no fresh metadata (Fig. 3 late-item case).
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.window import Window
