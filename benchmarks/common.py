@@ -7,6 +7,12 @@ import time
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
 
+# CI smoke mode (benchmarks/run.py --quick): quick-aware modules (fig7)
+# shrink their tick counts / sweeps / rep counts to run in seconds;
+# modules that don't read this flag run at full length. Numbers from a
+# quick run are for wiring checks, not the trajectory.
+QUICK = False
+
 
 def save(name: str, rows: list[dict]) -> None:
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)

@@ -10,10 +10,11 @@ Paper claims: 1.3×–9.9× speedup over native at fractions 80%→10%;
 WHS ≈ SRS throughput; ≈0 overhead at fraction 1.0; bandwidth kept at
 hop 0 ≈ sampling fraction (Fig. 8).
 
-Also compares the two HostTree execution engines on the paper topology
-(8→4→2→1): the level-vectorized engine (one jitted dispatch per level per
-tick) vs the seed per-node loop (one dispatch per node per tick) — the
-host dispatch saving the level engine exists for.
+Also compares the three HostTree execution engines on the paper topology
+(8→4→2→1): the fused scan engine (one jitted dispatch per T-tick epoch),
+the level-vectorized engine (one dispatch per level per tick), and the
+seed per-node loop (one dispatch per node per tick). The fraction sweep
+runs on the scan engine — the production configuration.
 """
 from __future__ import annotations
 
@@ -27,24 +28,37 @@ from benchmarks import common
 FRACTIONS = (0.1, 0.2, 0.4, 0.6, 0.8, 1.0)
 TICKS = 10
 ENGINE_TICKS = 12
+SWEEP_ENGINE = "scan"
+REPS = 3
 
 
 def run() -> list[dict]:
+    fractions = FRACTIONS[::2] if common.QUICK else FRACTIONS
+    ticks = 4 if common.QUICK else TICKS
+    engine_ticks = 4 if common.QUICK else ENGINE_TICKS
+    reps = 1 if common.QUICK else REPS
+
     specs = S.paper_gaussian()
-    native = run_pipeline(specs, fraction=1.0, ticks=TICKS, seed=7,
-                          mode="whs", warmup_ticks=2)
+
+    def sweep(**kw):
+        """Best-of-N pipeline rate: the emulation runs on a shared host,
+        so a single rep is noise-dominated."""
+        rs = [run_pipeline(specs, ticks=ticks, seed=7, warmup_ticks=2, **kw)
+              for _ in range(reps)]
+        return max(rs, key=lambda r: r["pipeline_items_s"])
+
+    native = sweep(fraction=1.0, mode="whs", engine=SWEEP_ENGINE)
     # sustained rate = the bottleneck stage's per-node service rate (the
     # testbed runs stages on separate machines; §V-A saturates the root)
     base_tp = native["pipeline_items_s"]
 
     rows = []
-    for f in FRACTIONS:
-        whs = run_pipeline(specs, fraction=f, ticks=TICKS, seed=7,
-                           mode="whs", warmup_ticks=2)
-        srs = run_pipeline(specs, fraction=f, ticks=TICKS, seed=7,
-                           mode="srs", warmup_ticks=2)
+    for f in fractions:
+        whs = sweep(fraction=f, mode="whs", engine=SWEEP_ENGINE)
+        srs = sweep(fraction=f, mode="srs", engine=SWEEP_ENGINE)
         rows.append({
             "fraction": f,
+            "engine": SWEEP_ENGINE,
             "whs_items_s": whs["pipeline_items_s"],
             "srs_items_s": srs["pipeline_items_s"],
             "native_items_s": base_tp,
@@ -53,41 +67,43 @@ def run() -> list[dict]:
             "srs_bw_kept": srs["bandwidth_fraction"],
         })
     common.table("Fig. 7/8 throughput + bandwidth vs fraction", rows)
+    by_f = {r["fraction"]: r for r in rows}
     lo = rows[0]["whs_speedup"]
-    hi = rows[-2]["whs_speedup"]
+    hi = by_f.get(0.8, rows[-1])["whs_speedup"]
     print(f"paper: speedup 9.9× @10% … 1.3× @80%; ours {lo:.1f}× … {hi:.1f}×")
-    print(f"paper: ≈0 overhead at fraction 1.0; ours "
-          f"{rows[-1]['whs_speedup']:.2f}× of native")
+    if 1.0 in by_f:
+        print(f"paper: ≈0 overhead at fraction 1.0; ours "
+              f"{by_f[1.0]['whs_speedup']:.2f}× of native")
 
-    # ---- engine × backend matrix: new level engine vs seed per-node loop
+    # ---- engine × backend matrix vs the seed per-node loop.
     # (loop, argsort) is the seed architecture: one jitted dispatch per
-    # node per tick, lexsort selection. (level, topk) is this repo's
-    # default: one dispatch per level, partial-selection thresholds.
-    # Best-of-3 per config: the emulation runs on a shared host, so a
-    # single rep is noise-dominated; min wall is the honest service time.
+    # node per tick, lexsort selection. (level, topk) was PR 1's default:
+    # one dispatch per level. (scan, topk) is this repo's production
+    # path: ONE dispatch per epoch (= the whole measured run here), with
+    # all tree state donated on device.
     eng_rows = []
-    for engine in ("loop", "level"):
+    for engine in ("loop", "level", "scan"):
         for backend in ("argsort", "topk"):
-            reps = [run_pipeline(specs, fraction=0.1, ticks=ENGINE_TICKS,
-                                 seed=7, mode="whs", engine=engine,
-                                 sampler_backend=backend, warmup_ticks=2)
-                    for _ in range(3)]
-            r = min(reps, key=lambda r: r["wall_s"])
+            rs = [run_pipeline(specs, fraction=0.1, ticks=engine_ticks,
+                               seed=7, mode="whs", engine=engine,
+                               sampler_backend=backend, warmup_ticks=2)
+                  for _ in range(reps)]
+            r = min(rs, key=lambda r: r["wall_s"])
             eng_rows.append({
                 "engine": engine,
                 "backend": backend,
                 "wall_s": r["wall_s"],
                 "ingest_items_s": r["throughput_items_s"],
-                "sampler_time_s": min(sum(x["level_time_s"]) for x in reps),
+                "sampler_time_s": min(sum(x["level_time_s"]) for x in rs),
                 "dispatches": r["dispatches"],
             })
     seed_like = eng_rows[0]          # loop + argsort
-    new_default = eng_rows[-1]       # level + topk
+    new_default = eng_rows[-1]       # scan + topk
     speedup = seed_like["wall_s"] / max(new_default["wall_s"], 1e-9)
     new_default["wall_speedup_vs_seed_loop"] = speedup
     common.table("Engine × backend (8→4→2→1, f=0.1; seed = loop+argsort)",
                  eng_rows)
-    print(f"level+topk vs seed per-node loop: {speedup:.2f}× wall, "
+    print(f"scan+topk vs seed per-node loop: {speedup:.2f}× wall, "
           f"{seed_like['dispatches']}→{new_default['dispatches']} dispatches"
           f" per run")
     rows.extend({"fraction": f"engine:{r['engine']}+{r['backend']}", **r}

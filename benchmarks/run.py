@@ -38,8 +38,17 @@ def main(argv=None) -> int:
                     help="comma-separated subset of: " + ",".join(MODULES))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all module result rows to PATH as JSON")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: quick-aware modules (fig7) shrink "
+                         "their ticks/sweeps/reps to run in seconds; pair "
+                         "with --only to restrict to them (wiring check "
+                         "only, numbers are not trajectory-grade)")
     args = ap.parse_args(argv)
     chosen = args.only.split(",") if args.only else list(MODULES)
+
+    if args.quick:
+        from benchmarks import common
+        common.QUICK = True
 
     from benchmarks import (fig6_accuracy, fig7_throughput, fig9_latency,
                             fig11_skew, fig12_realworld, kernels_micro,

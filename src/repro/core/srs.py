@@ -20,6 +20,18 @@ def srs_select(key: jax.Array, batch: IntervalBatch, fraction: float | jnp.ndarr
     return (u < fraction) & batch.valid
 
 
+def level_srs_select(keys: jax.Array, valid: jnp.ndarray,
+                     fraction: float | jnp.ndarray) -> jnp.ndarray:
+    """``srs_select`` over a stacked hierarchy level: one key per node,
+    ``valid`` is ``[n_nodes, cap]``. Pure array program — traces inside
+    ``jit``, ``vmap``, and the scan engine's ``lax.scan`` tree-step —
+    and draws the exact per-node uniforms ``srs_select`` would, so the
+    loop / level / scan engines stay bit-identical."""
+    cap = valid.shape[1]
+    u = jax.vmap(lambda k: jax.random.uniform(k, (cap,)))(keys)
+    return (u < fraction) & valid
+
+
 def srs_sum(batch: IntervalBatch, selected: jnp.ndarray, fraction: float) -> QueryResult:
     """Horvitz–Thompson estimate of the interval SUM under SRS.
 

@@ -19,12 +19,26 @@ folding (tick, level, node) into the tree's base key):
   a rewrite.
 * ``engine="loop"`` — the per-node reference engine (one jitted step per
   node per tick, the seed implementation). Kept as the bit-exact oracle
-  for the vectorized engine and for dispatch-cost comparisons.
+  for the vectorized engines and for dispatch-cost comparisons.
+* ``engine="scan"`` — the fused whole-tree engine. The entire hierarchy
+  (ingest → per-level sampling → in-graph child→parent routing →
+  metadata fold → root query) is one traced tree-step, and ``T`` ticks
+  are batched into a single ``lax.scan`` **epoch** dispatch with every
+  reservoir/window buffer donated (``donate_argnums``), so state never
+  leaves the device between ticks. Host cost per epoch: one ingest
+  transfer down, one stacked result transfer up, one dispatch — the
+  per-tick Python round-trip that bounds the ``level`` engine at high
+  tick rates is gone. Level steps reuse the *same* core functions as the
+  ``level`` engine (``_whs_level_core`` etc.) and the same
+  ``(tick, level, node)`` key folding, so all three engines are
+  bit-identical on identical ingest.
 
 ``sampler_backend`` selects the selection engine end-to-end — ``topk``
 (``HostTree``'s default: dense partial-selection thresholds, bit-identical
 to the reference and fastest on CPU), ``argsort`` (lexsort reference), or
-``pallas`` (fused kernels); see ``core.sampling``.
+``pallas`` (fused kernels); see ``core.sampling``. All three backends
+trace inside the scan engine's ``lax.scan`` (the pallas kernels run in
+interpret mode off-TPU).
 
 ``spmd_local_then_root`` — the in-graph two-level hierarchy used at pod
 scale: every device samples its local sub-streams, compacts, all-gathers
@@ -111,12 +125,104 @@ def _route_pack(values_c, strata_c, valid_c, child_of: np.ndarray):
 
 
 # --------------------------------------------------------------------------
+# Pure core functions — the single source of truth for node/level/root math.
+# The jitted `level`/`loop` step factories AND the scan engine's fused
+# tree-step call these, which is what keeps every engine bit-identical.
+# --------------------------------------------------------------------------
+def _whs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                   sample_size, *, num_strata, allocation, backend, budget,
+                   hist_bins=64):
+    """Root = sampling + the user query (§III-A lines 16-20). The query here
+    is the paper's evaluation workload: windowed SUM and MEAN with error
+    bounds, plus a value histogram (a representative GROUP-BY aggregate —
+    the datacenter node runs the real analytics, not just the sampler)."""
+    from repro.core import queries
+
+    k = _node_key(key, t, lvl, 0)
+    batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
+    res = whs.whsamp(k, batch, sample_size, num_strata,
+                     allocation=allocation, backend=backend,
+                     max_reservoir=budget)
+    s = err.approx_sum(batch.value, batch.stratum, res.selected, res.meta, num_strata)
+    m = err.approx_mean(batch.value, batch.stratum, res.selected, res.meta, num_strata)
+    lo = jnp.min(jnp.where(res.selected, batch.value, jnp.inf))
+    hi = jnp.max(jnp.where(res.selected, batch.value, -jnp.inf))
+    edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
+    h = queries.weighted_histogram(batch, res, num_strata, edges)
+    return (s.estimate, s.variance, m.estimate, m.variance,
+            jnp.sum(res.selected.astype(jnp.int32)), h.estimate)
+
+
+def _srs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                   p_keep, f_total, *, num_strata, hist_bins=64):
+    """Same query workload as the WHS root (fair throughput comparison):
+    SUM/MEAN + histogram, with Horvitz–Thompson 1/f weights."""
+    from repro.core import srs
+
+    k = _node_key(key, t, lvl, 0)
+    batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
+    selected = srs.srs_select(k, batch, p_keep)
+    s = srs.srs_sum(batch, selected, f_total)
+    m = srs.srs_mean(batch, selected, f_total)
+    lo = jnp.min(jnp.where(selected, batch.value, jnp.inf))
+    hi = jnp.max(jnp.where(selected, batch.value, -jnp.inf))
+    edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
+    bin_ix = jnp.clip(jnp.searchsorted(edges, batch.value, side="right") - 1,
+                      0, hist_bins - 1)
+    hist = jnp.zeros((hist_bins,), jnp.float32).at[
+        jnp.where(selected, bin_ix, hist_bins - 1)
+    ].add(jnp.where(selected, 1.0 / f_total, 0.0))
+    return (s.estimate, s.variance, m.estimate, m.variance,
+            jnp.sum(selected.astype(jnp.int32)), hist)
+
+
+def _whs_level_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                    sample_size, *, num_strata, out_capacity, child_of,
+                    allocation, backend):
+    """One WHS hierarchy level: sample, compact, route to parents."""
+    n_nodes = values.shape[0]
+    keys = _level_keys(key, t, lvl, n_nodes)
+    res = whs.level_whsamp(keys, values, strata, valid, w_in, c_in,
+                           sample_size, num_strata,
+                           allocation=allocation, backend=backend,
+                           max_reservoir=out_capacity)
+    v_c, s_c, valid_c, meta = whs.level_compact(values, strata, res,
+                                                out_capacity)
+    present = _present_strata(s_c, valid_c, num_strata)
+    packed_v, packed_s, n_deliv = _route_pack(v_c, s_c, valid_c, child_of)
+    n_fwd = jnp.sum(valid_c, axis=1, dtype=jnp.int32)
+    return (packed_v, packed_s, n_deliv,
+            meta.weight, meta.count, present, n_fwd)
+
+
+def _srs_level_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                    p_keep, *, num_strata, out_capacity, child_of):
+    """One SRS hierarchy level: coin-flip keep, compact, route to parents."""
+    from repro.core import srs
+
+    n_nodes, capacity = values.shape
+    out_cap = min(out_capacity, capacity)
+    keys = _level_keys(key, t, lvl, n_nodes)
+    selected = srs.level_srs_select(keys, valid, p_keep)
+    v_c, s_c, n_sel = whs.pack_rows(values, strata, selected, out_cap)
+    n_keep = jnp.minimum(n_sel, out_cap)
+    valid_c = jnp.arange(out_cap)[None, :] < n_keep[:, None]
+    present = _present_strata(s_c, valid_c, num_strata)
+    packed_v, packed_s, n_deliv = _route_pack(v_c, s_c, valid_c, child_of)
+    # SRS carries no sampler metadata: W/C sets pass through unchanged.
+    return packed_v, packed_s, n_deliv, w_in, c_in, present, n_keep
+
+
+# --------------------------------------------------------------------------
 # Jitted per-node steps (loop engine — the bit-exact reference).
+# The sticky W/C buffers are donated (argnums 6/7): their shapes/dtypes
+# match the outgoing meta sets exactly, so XLA reuses the reservoir
+# metadata buffers in place instead of copying them every tick.
 # --------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _node_step(capacity: int, num_strata: int, out_capacity: int,
                allocation: str, backend: str, lvl: int):
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(6, 7))
     def step(key, t, ix, values, strata, valid, w_in, c_in, sample_size):
         k = _node_key(key, t, lvl, ix)
         batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
@@ -133,27 +239,12 @@ def _node_step(capacity: int, num_strata: int, out_capacity: int,
 @functools.lru_cache(maxsize=None)
 def _root_step(capacity: int, num_strata: int, allocation: str, backend: str,
                lvl: int, budget: int, hist_bins: int = 64):
-    """Root = sampling + the user query (§III-A lines 16-20). The query here
-    is the paper's evaluation workload: windowed SUM and MEAN with error
-    bounds, plus a value histogram (a representative GROUP-BY aggregate —
-    the datacenter node runs the real analytics, not just the sampler)."""
-    from repro.core import queries
-
     @jax.jit
     def step(key, t, values, strata, valid, w_in, c_in, sample_size):
-        k = _node_key(key, t, lvl, 0)
-        batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
-        res = whs.whsamp(k, batch, sample_size, num_strata,
-                         allocation=allocation, backend=backend,
-                         max_reservoir=budget)
-        s = err.approx_sum(batch.value, batch.stratum, res.selected, res.meta, num_strata)
-        m = err.approx_mean(batch.value, batch.stratum, res.selected, res.meta, num_strata)
-        lo = jnp.min(jnp.where(res.selected, batch.value, jnp.inf))
-        hi = jnp.max(jnp.where(res.selected, batch.value, -jnp.inf))
-        edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
-        h = queries.weighted_histogram(batch, res, num_strata, edges)
-        return (s.estimate, s.variance, m.estimate, m.variance,
-                jnp.sum(res.selected.astype(jnp.int32)), h.estimate)
+        return _whs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                              sample_size, num_strata=num_strata,
+                              allocation=allocation, backend=backend,
+                              budget=budget, hist_bins=hist_bins)
 
     return step
 
@@ -165,7 +256,7 @@ def _srs_node_step(capacity: int, num_strata: int, out_capacity: int, lvl: int):
 
     out_cap = min(out_capacity, capacity)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(6, 7))
     def step(key, t, ix, values, strata, valid, w_in, c_in, p_keep):
         k = _node_key(key, t, lvl, ix)
         batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
@@ -182,33 +273,18 @@ def _srs_node_step(capacity: int, num_strata: int, out_capacity: int, lvl: int):
 @functools.lru_cache(maxsize=None)
 def _srs_root_step(capacity: int, num_strata: int, lvl: int,
                    hist_bins: int = 64):
-    """Same query workload as the WHS root (fair throughput comparison):
-    SUM/MEAN + histogram, with Horvitz–Thompson 1/f weights."""
-    from repro.core import srs
-
     @jax.jit
     def step(key, t, values, strata, valid, w_in, c_in, p_keep, f_total):
-        k = _node_key(key, t, lvl, 0)
-        batch = IntervalBatch(values, strata, valid, StratumMeta(w_in, c_in))
-        selected = srs.srs_select(k, batch, p_keep)
-        s = srs.srs_sum(batch, selected, f_total)
-        m = srs.srs_mean(batch, selected, f_total)
-        lo = jnp.min(jnp.where(selected, batch.value, jnp.inf))
-        hi = jnp.max(jnp.where(selected, batch.value, -jnp.inf))
-        edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
-        bin_ix = jnp.clip(jnp.searchsorted(edges, batch.value, side="right") - 1,
-                          0, hist_bins - 1)
-        hist = jnp.zeros((hist_bins,), jnp.float32).at[
-            jnp.where(selected, bin_ix, hist_bins - 1)
-        ].add(jnp.where(selected, 1.0 / f_total, 0.0))
-        return (s.estimate, s.variance, m.estimate, m.variance,
-                jnp.sum(selected.astype(jnp.int32)), hist)
+        return _srs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                              p_keep, f_total, num_strata=num_strata,
+                              hist_bins=hist_bins)
 
     return step
 
 
 # --------------------------------------------------------------------------
 # Jitted level steps (level-vectorized engine): one dispatch per level.
+# Sticky W/C sets donated (argnums 5/6) — same shapes as the outgoing meta.
 # --------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _whs_level_step(n_nodes: int, capacity: int, num_strata: int,
@@ -216,20 +292,12 @@ def _whs_level_step(n_nodes: int, capacity: int, num_strata: int,
                     backend: str, lvl: int):
     child_of = _child_routing(n_nodes, n_parents)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(5, 6))
     def step(key, t, values, strata, valid, w_in, c_in, sample_size):
-        keys = _level_keys(key, t, lvl, n_nodes)
-        res = whs.level_whsamp(keys, values, strata, valid, w_in, c_in,
-                               sample_size, num_strata,
-                               allocation=allocation, backend=backend,
-                               max_reservoir=out_capacity)
-        v_c, s_c, valid_c, meta = whs.level_compact(values, strata, res,
-                                                    out_capacity)
-        present = _present_strata(s_c, valid_c, num_strata)
-        packed_v, packed_s, n_deliv = _route_pack(v_c, s_c, valid_c, child_of)
-        n_fwd = jnp.sum(valid_c, axis=1, dtype=jnp.int32)
-        return (packed_v, packed_s, n_deliv,
-                meta.weight, meta.count, present, n_fwd)
+        return _whs_level_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                               sample_size, num_strata=num_strata,
+                               out_capacity=out_capacity, child_of=child_of,
+                               allocation=allocation, backend=backend)
 
     return step
 
@@ -238,22 +306,250 @@ def _whs_level_step(n_nodes: int, capacity: int, num_strata: int,
 def _srs_level_step(n_nodes: int, capacity: int, num_strata: int,
                     out_capacity: int, n_parents: int, lvl: int):
     child_of = _child_routing(n_nodes, n_parents)
-    out_cap = min(out_capacity, capacity)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(5, 6))
     def step(key, t, values, strata, valid, w_in, c_in, p_keep):
-        keys = _level_keys(key, t, lvl, n_nodes)
-        u = jax.vmap(lambda k: jax.random.uniform(k, (capacity,)))(keys)
-        selected = (u < p_keep) & valid
-        v_c, s_c, n_sel = whs.pack_rows(values, strata, selected, out_cap)
-        n_keep = jnp.minimum(n_sel, out_cap)
-        valid_c = jnp.arange(out_cap)[None, :] < n_keep[:, None]
-        present = _present_strata(s_c, valid_c, num_strata)
-        packed_v, packed_s, n_deliv = _route_pack(v_c, s_c, valid_c, child_of)
-        # SRS carries no sampler metadata: W/C sets pass through unchanged.
-        return packed_v, packed_s, n_deliv, w_in, c_in, present, n_keep
+        return _srs_level_core(key, t, lvl, values, strata, valid, w_in, c_in,
+                               p_keep, num_strata=num_strata,
+                               out_capacity=out_capacity, child_of=child_of)
 
     return step
+
+
+# --------------------------------------------------------------------------
+# Scan engine: the whole tree fused into one tree-step, T ticks per dispatch.
+# --------------------------------------------------------------------------
+def _append_rows(values, strata, fill, dropped, add_v, add_s, add_n,
+                 empty: bool = False):
+    """In-graph ``Window.deliver`` / ``LevelState.deliver_packed``: append
+    each row's first ``add_n[r]`` incoming items at the row's fill offset,
+    truncating at capacity (prefix rule — identical to the host buffers'
+    backpressure behavior).
+
+    ``empty=True`` is the static all-1-interval fast path: the receiving
+    buffer is provably empty (it flushed last tick and receives exactly
+    one message per tick), so the append is a plain prefix overwrite — no
+    scatter. The message already arrives front-packed, so the buffer *is*
+    the (zero-padded) message; slots past ``take`` are masked by ``fill``
+    downstream either way."""
+    n, cap = values.shape
+    k = add_v.shape[1]
+    add_n = add_n.astype(jnp.int32)
+    if empty:
+        take = jnp.minimum(add_n, cap)
+        if k < cap:
+            padv = jnp.zeros((n, cap - k), add_v.dtype)
+            pads = jnp.zeros((n, cap - k), add_s.dtype)
+            add_v = jnp.concatenate([add_v, padv], axis=1)
+            add_s = jnp.concatenate([add_s, pads], axis=1)
+        elif k > cap:
+            add_v, add_s = add_v[:, :cap], add_s[:, :cap]
+        return add_v, add_s, take, dropped + (add_n - take)
+    take = jnp.minimum(add_n, cap - fill)
+    j = jnp.arange(k, dtype=jnp.int32)[None, :]
+    ok = j < take[:, None]
+    pos = fill[:, None] + j
+    row = jnp.arange(n, dtype=jnp.int32)[:, None]
+    idx = jnp.where(ok, row * cap + pos, n * cap).reshape(-1)
+    values = values.reshape(-1).at[idx].set(
+        add_v.reshape(-1), mode="drop").reshape(n, cap)
+    strata = strata.reshape(-1).at[idx].set(
+        add_s.reshape(-1), mode="drop").reshape(n, cap)
+    return values, strata, fill + take, dropped + (add_n - take)
+
+
+def _fold_meta_graph(wc_acc, c_acc, seen, child_of: np.ndarray,
+                     present, w_out, c_out):
+    """In-graph ``LevelState.fold_meta``: fold each child's (W^out, C^out)
+    message into its parent's interval accumulators, child slots in
+    ascending order (a static unroll over the children-per-parent axis,
+    so the f32 accumulation order bit-matches the host's sequential
+    ``np.add.at``)."""
+    n, x = w_out.shape
+    pad = lambda a, dt: jnp.concatenate([a, jnp.zeros((1, x), dt)])
+    wp = pad(w_out, w_out.dtype)
+    cp = pad(c_out, c_out.dtype)
+    prp = jnp.concatenate([present, jnp.zeros((1, x), bool)])
+    gather = jnp.asarray(child_of)          # [P, cpp], sentinel row = n
+    for k in range(child_of.shape[1]):
+        ch = gather[:, k]
+        pr = prp[ch]
+        wc_acc = wc_acc + jnp.where(pr, wp[ch] * cp[ch], 0.0)
+        c_acc = c_acc + jnp.where(pr, cp[ch], 0.0)
+        seen = seen | pr
+    return wc_acc, c_acc, seen
+
+
+def _flush_meta(wc_acc, c_acc, seen, w_in, c_in):
+    """In-graph ``flush`` metadata merge: fresh count-weighted-mean sets
+    where metadata arrived this interval, sticky values elsewhere."""
+    w_merged = wc_acc / jnp.maximum(c_acc, 1.0)
+    w_eff = jnp.where(seen, w_merged, w_in)
+    c_eff = jnp.where(seen, c_acc, c_in)
+    return w_eff, c_eff
+
+
+def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
+                     num_strata, allocation, backend, mode, p_level,
+                     fraction, trace_counter=None):
+    """Build the fused whole-tree tick: ``(state, key, t, ingest) →
+    (state', per-tick outputs)``.
+
+    Levels are chained in-graph exactly like ``_tick_level`` chains them on
+    the host: level ``l`` flushes, samples, and its packed forwards are
+    appended to level ``l+1``'s buffers *before* level ``l+1`` flushes, so
+    one tick pushes data through the whole hierarchy. Levels whose interval
+    has not elapsed are gated with ``where`` (their buffers keep
+    accumulating); with all-1 intervals (the paper topology) the gates are
+    static and the graph is branch-free.
+    """
+    from repro.core.window import TreeState
+
+    n_levels = len(fanin)
+    child_tables = [_child_routing(fanin[l], fanin[l + 1])
+                    for l in range(n_levels - 1)]
+
+    def tick(state: "TreeState", key, t, ing_v, ing_s, ing_n):
+        if trace_counter is not None:
+            trace_counter["traces"] += 1
+        lv = {f: list(getattr(state, f)) for f in TreeState._fields}
+
+        # Source → level-0 delivery (one slice of the epoch's ingest batch).
+        # With a 1-tick level-0 interval the buffer is empty here (it
+        # flushed last tick), so the append is a scatter-free overwrite.
+        (lv["values"][0], lv["strata"][0], lv["fill"][0],
+         lv["dropped"][0]) = _append_rows(
+            lv["values"][0], lv["strata"][0], lv["fill"][0],
+            lv["dropped"][0], ing_v, ing_s, ing_n,
+            empty=int(interval_ticks[0]) == 1)
+
+        n_fwd_levels = []
+        root_out = None
+        for l in range(n_levels):
+            iv = int(interval_ticks[l])
+            is_root = l == n_levels - 1
+            cap = capacities[l]
+            fill = lv["fill"][l]
+
+            def run_level(l=l, iv=iv, is_root=is_root, cap=cap, fill=fill):
+                """Flush + sample + route + reset for a due level. Returns
+                every state leaf the level touches plus its outputs, so a
+                not-due tick can ``cond`` the whole body away."""
+                valid = (jnp.arange(cap, dtype=jnp.int32)[None, :]
+                         < fill[:, None])
+                w_eff, c_eff = _flush_meta(lv["wc_acc"][l], lv["c_acc"][l],
+                                           lv["seen"][l], lv["w_in"][l],
+                                           lv["c_in"][l])
+                values, strata = lv["values"][l], lv["strata"][l]
+                # Interval reset (``flush``): clear occupancy +
+                # accumulators, refresh stickies. Buffer contents are left
+                # stale — every consumer masks by the valid range, exactly
+                # as with zeroing.
+                reset = (jnp.zeros_like(fill), jnp.zeros_like(lv["wc_acc"][l]),
+                         jnp.zeros_like(lv["c_acc"][l]),
+                         jnp.zeros_like(lv["seen"][l]), w_eff, c_eff)
+                if is_root:
+                    # Root: single node — squeeze node axis, run the query.
+                    if mode == "srs":
+                        outs = _srs_root_core(
+                            key, t, l, values[0], strata[0], valid[0],
+                            w_eff[0], c_eff[0], jnp.float32(p_level),
+                            jnp.float32(fraction), num_strata=num_strata)
+                    else:
+                        outs = _whs_root_core(
+                            key, t, l, values[0], strata[0], valid[0],
+                            w_eff[0], c_eff[0],
+                            jnp.float32(sample_sizes[l]),
+                            num_strata=num_strata, allocation=allocation,
+                            backend=backend, budget=int(sample_sizes[l]))
+                    root_ok = jnp.sum(fill) > 0
+                    return ((root_ok,) + outs) + reset
+                if mode == "srs":
+                    (packed_v, packed_s, n_deliv, w_out, c_out, present,
+                     n_fwd) = _srs_level_core(
+                        key, t, l, values, strata, valid, w_eff, c_eff,
+                        jnp.float32(p_level), num_strata=num_strata,
+                        out_capacity=int(sample_sizes[l]),
+                        child_of=child_tables[l])
+                else:
+                    (packed_v, packed_s, n_deliv, w_out, c_out, present,
+                     n_fwd) = _whs_level_core(
+                        key, t, l, values, strata, valid, w_eff, c_eff,
+                        jnp.float32(sample_sizes[l]), num_strata=num_strata,
+                        out_capacity=int(sample_sizes[l]),
+                        child_of=child_tables[l],
+                        allocation=allocation, backend=backend)
+                # 1-tick intervals on both ends ⇒ exactly one message into
+                # an empty parent buffer per tick ⇒ scatter-free overwrite.
+                parent = _append_rows(
+                    lv["values"][l + 1], lv["strata"][l + 1],
+                    lv["fill"][l + 1], lv["dropped"][l + 1],
+                    packed_v, packed_s, n_deliv,
+                    empty=(iv == 1 and int(interval_ticks[l + 1]) == 1))
+                parent_meta = _fold_meta_graph(
+                    lv["wc_acc"][l + 1], lv["c_acc"][l + 1],
+                    lv["seen"][l + 1], child_tables[l], present,
+                    w_out, c_out)
+                return (parent + parent_meta + (jnp.sum(n_fwd),)) + reset
+
+            def skip_level(l=l, is_root=is_root, fill=fill):
+                """Not-due tick: every touched leaf unchanged, null output."""
+                keep = (fill, lv["wc_acc"][l], lv["c_acc"][l], lv["seen"][l],
+                        lv["w_in"][l], lv["c_in"][l])
+                if is_root:
+                    f32 = lambda: jnp.zeros((), jnp.float32)
+                    nul = (jnp.zeros((), bool), f32(), f32(), f32(), f32(),
+                           jnp.zeros((), jnp.int32),
+                           jnp.zeros((64,), jnp.float32))
+                    return nul + keep
+                nul = (lv["values"][l + 1], lv["strata"][l + 1],
+                       lv["fill"][l + 1], lv["dropped"][l + 1],
+                       lv["wc_acc"][l + 1], lv["c_acc"][l + 1],
+                       lv["seen"][l + 1], jnp.zeros((), jnp.int32))
+                return nul + keep
+
+            if iv == 1:
+                out = run_level()
+            else:
+                # cond executes ONE branch at runtime: a level whose
+                # interval has not elapsed costs nothing — its buffers
+                # keep accumulating untouched.
+                out = jax.lax.cond(t % iv == 0, run_level, skip_level)
+
+            if is_root:
+                root_out = out[:7]
+                tail = out[7:]
+            else:
+                (lv["values"][l + 1], lv["strata"][l + 1], lv["fill"][l + 1],
+                 lv["dropped"][l + 1], lv["wc_acc"][l + 1],
+                 lv["c_acc"][l + 1], lv["seen"][l + 1]) = out[:7]
+                n_fwd_levels.append(out[7])
+                tail = out[8:]
+            (lv["fill"][l], lv["wc_acc"][l], lv["c_acc"][l], lv["seen"][l],
+             lv["w_in"][l], lv["c_in"][l]) = tail
+
+        new_state = TreeState(**{f: tuple(lv[f]) for f in TreeState._fields})
+        out = root_out + (jnp.stack(n_fwd_levels),)
+        return new_state, out
+
+    return tick
+
+
+def _build_epoch_fn(tick_fn, epoch_ticks: int):
+    """One jitted dispatch per ``epoch_ticks``-tick epoch: ``lax.scan``
+    over the fused tree-step, every ``TreeState`` buffer donated so the
+    reservoir/window state is updated in place on device."""
+
+    def epoch(state, key, t0, ing_v, ing_s, ing_n):
+        ts = t0 + jnp.arange(epoch_ticks, dtype=jnp.int32)
+
+        def body(st, xs):
+            t, v, s, n = xs
+            return tick_fn(st, key, t, v, s, n)
+
+        return jax.lax.scan(body, state, (ts, ing_v, ing_s, ing_n))
+
+    return jax.jit(epoch, donate_argnums=(0,))
 
 
 class HostTree:
@@ -266,12 +562,24 @@ class HostTree:
 
     ``engine`` selects the execution strategy (see module docstring):
     ``"level"`` issues one jitted dispatch per level per tick,
-    ``"loop"`` one per node per tick. ``dispatch_count`` tracks jitted
-    step invocations so tests/benchmarks can verify the dispatch model.
+    ``"loop"`` one per node per tick, ``"scan"`` one per **epoch** of
+    ``T`` ticks (drive it with ``run_epoch`` instead of
+    ``ingest``/``tick``). ``dispatch_count`` tracks jitted step
+    invocations so tests/benchmarks can verify the dispatch model.
     ``sampler_backend`` is threaded through to every WHSamp call.
 
+    Donation caveat: the ``level``/``loop`` engines donate the sticky
+    W/C metadata buffers into their steps, and the ``scan`` engine
+    donates the *entire* ``TreeState``; callers must not hold references
+    to state arrays across a tick/epoch (the tree itself never does —
+    host flushes hand fresh copies to the steps).
+
     Per-level processing wall-time is accumulated in ``level_time_s``
-    (drives the Fig. 9/10 latency model)."""
+    (drives the Fig. 9/10 latency model). The scan engine cannot observe
+    per-level time inside its fused dispatch, so it attributes each
+    epoch's device wall-time to levels proportionally to their buffer
+    slots (``n_nodes × capacity``) — a static model of where the work
+    is."""
 
     def __init__(
         self,
@@ -290,11 +598,11 @@ class HostTree:
         # functions keep the argsort reference as their default.
         sampler_backend: str = "topk",
     ):
-        from repro.core.window import LevelState, Window
+        from repro.core.window import LevelState, TreeState, Window
 
         assert fanin[-1] == 1, "last level must be the single root"
         assert mode in ("whs", "srs")
-        assert engine in ("level", "loop")
+        assert engine in ("level", "loop", "scan")
         self.fanin = fanin
         self.num_strata = num_strata
         self.allocation = allocation
@@ -313,22 +621,39 @@ class HostTree:
         for lvl, n_nodes in enumerate(fanin):
             self.capacities.append(cap)
             if lvl + 1 < len(fanin):
-                # Next level's buffer: every child may forward a full budget
-                # per interval; 2x slack absorbs interval misalignment (§III-C).
+                # Next level's buffer: every child forwards ≤ its budget per
+                # flush, and with globally-ticked intervals a parent
+                # accumulates at most ceil(P/C) child flushes per interval —
+                # an exact arrival bound, so the buffer can never truncate.
+                # (The seed's 2x slack came from the paper's fully-async
+                # §III-C intervals; this emulation's intervals share the
+                # global tick, so the bound is tight and buys upper-level
+                # buffers — and their sort/top-k passes — half the slots.)
                 children_per_parent = -(-n_nodes // fanin[lvl + 1])  # ceil
-                cap = max(2 * sample_sizes[lvl] * children_per_parent, 64)
+                flushes = -(-interval_ticks[lvl + 1] // interval_ticks[lvl])
+                cap = max(sample_sizes[lvl] * children_per_parent * flushes,
+                          64)
         if engine == "loop":
             self.levels = [
                 [Window(self.capacities[lvl], num_strata, interval_ticks[lvl])
                  for _ in range(n_nodes)]
                 for lvl, n_nodes in enumerate(fanin)
             ]
-        else:
+        elif engine == "level":
             self.levels = [
                 LevelState(n_nodes, self.capacities[lvl], num_strata,
                            interval_ticks[lvl])
                 for lvl, n_nodes in enumerate(fanin)
             ]
+        else:  # scan: whole-tree on-device state, one dispatch per epoch
+            self.levels = None
+            self._state = TreeState.create(fanin, self.capacities, num_strata)
+            self._trace_counter = {"traces": 0}
+            self._tick_fn = _build_scan_tick(
+                fanin, self.capacities, sample_sizes, interval_ticks,
+                num_strata, allocation, sampler_backend, mode, self.p_level,
+                fraction, trace_counter=self._trace_counter)
+            self._epoch_fns: dict[int, object] = {}
         self._key = jax.random.PRNGKey(seed)
         self.items_forwarded = [0] * len(fanin)   # bandwidth accounting (Fig. 8)
         self.items_ingested = 0
@@ -338,6 +663,9 @@ class HostTree:
 
     def ingest(self, node: int, values: np.ndarray, strata: np.ndarray) -> None:
         """Source → level-0 node delivery."""
+        if self.engine == "scan":
+            raise RuntimeError("engine='scan' ingests per epoch: use "
+                               "run_epoch(t0, values, strata, counts)")
         self.items_ingested += len(values)
         if self.engine == "loop":
             self.levels[0][node].deliver(values, strata)
@@ -346,10 +674,64 @@ class HostTree:
 
     def tick(self, t: int) -> None:
         """Advance one global tick: flush every due window, push upstream."""
+        if self.engine == "scan":
+            raise RuntimeError("engine='scan' advances per epoch: use "
+                               "run_epoch(t0, values, strata, counts)")
         if self.engine == "loop":
             self._tick_loop(t)
         else:
             self._tick_level(t)
+
+    # ------------------------------------------------------------- scan --
+    def run_epoch(self, t0: int, values: np.ndarray, strata: np.ndarray,
+                  counts: np.ndarray,
+                  offered: np.ndarray | None = None) -> None:
+        """Advance ``T`` ticks (``t0 .. t0+T-1``) in ONE jitted dispatch.
+
+        ``values``/``strata`` are ``[T, fanin[0], width]`` tick-major
+        padded ingest (see ``data.stream.batch_ingest``), ``counts`` the
+        per-(tick, node) item counts. ``offered`` is the pre-truncation
+        count for ``items_ingested`` accounting, so bandwidth fractions
+        match the per-tick engines when a (tick, node) overflows the
+        ingest width (defaults to ``counts``). The whole epoch's ingest
+        moves host→device in one transfer; the tree state stays on
+        device (donated) and only the stacked per-tick root results come
+        back.
+        """
+        import time as _time
+
+        assert self.engine == "scan", "run_epoch requires engine='scan'"
+        epoch_ticks, n0, _ = values.shape
+        assert n0 == self.fanin[0], "ingest rows must match level-0 nodes"
+        fn = self._epoch_fns.get(epoch_ticks)
+        if fn is None:
+            fn = self._epoch_fns[epoch_ticks] = _build_epoch_fn(
+                self._tick_fn, epoch_ticks)
+        t_start = _time.perf_counter()
+        self._state, outs = fn(
+            self._state, self._key, jnp.int32(t0),
+            jnp.asarray(values, jnp.float32), jnp.asarray(strata, jnp.int32),
+            jnp.asarray(counts, jnp.int32))
+        (root_ok, se, sv, me, mv, nsel, hist, n_fwd) = (
+            np.asarray(o) for o in outs)          # one device→host sync
+        wall = _time.perf_counter() - t_start
+        self.dispatch_count += 1
+        # Slot-proportional level-time attribution (class docstring).
+        slots = [n * c for n, c in zip(self.fanin, self.capacities)]
+        total = float(sum(slots))
+        for lvl, s in enumerate(slots):
+            self.level_time_s[lvl] += wall * s / total
+        self.items_ingested += int(
+            (counts if offered is None else offered).sum())
+        for lvl in range(len(self.fanin) - 1):
+            self.items_forwarded[lvl] += int(n_fwd[:, lvl].sum())
+        for i in range(epoch_ticks):
+            if root_ok[i]:
+                self.results.append(dict(
+                    tick=t0 + i, sum=float(se[i]), sum_var=float(sv[i]),
+                    mean=float(me[i]), mean_var=float(mv[i]),
+                    n_sampled=int(nsel[i]), histogram=hist[i],
+                ))
 
     # ------------------------------------------------------------- loop --
     def _tick_loop(self, t: int) -> None:
@@ -537,3 +919,39 @@ def spmd_local_then_root(
     # (all_gather outputs stay `varying` under JAX's vma typing).
     rep = lambda t: jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), t)
     return rep(s), rep(m)
+
+
+def spmd_local_then_root_epoch(
+    key: jax.Array,
+    batches: IntervalBatch,
+    *,
+    axis_name: str,
+    num_strata: int,
+    local_budget: int,
+    root_budget: int,
+    allocation: str = "fair",
+    sampler_backend: str = sampling.DEFAULT_BACKEND,
+) -> tuple[QueryResult, QueryResult]:
+    """Epoch-batched ``spmd_local_then_root``: ``T`` interval batches in
+    one ``lax.scan``, one dispatch per epoch instead of one per interval.
+
+    ``batches`` is an ``IntervalBatch`` whose array leaves carry a leading
+    tick axis (``value[T, M]``, per-tick ``meta`` sets ``[T, X]``). Each
+    tick ``i`` folds ``i`` into the epoch key, so results match ``T``
+    separate calls with ``fold_in(key, i)`` keys bit-for-bit. Returns
+    (sum, mean) ``QueryResult``s with ``[T]``-stacked leaves. Call under
+    ``shard_map`` exactly like the per-interval function.
+    """
+    def body(i, batch):
+        s, m = spmd_local_then_root(
+            jax.random.fold_in(key, i), batch, axis_name=axis_name,
+            num_strata=num_strata, local_budget=local_budget,
+            root_budget=root_budget, allocation=allocation,
+            sampler_backend=sampler_backend)
+        return (s, m)
+
+    t = batches.value.shape[0]
+    _, outs = jax.lax.scan(
+        lambda c, xs: (c, body(xs[0], xs[1])),
+        0, (jnp.arange(t, dtype=jnp.int32), batches))
+    return outs

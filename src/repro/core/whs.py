@@ -125,18 +125,29 @@ def level_whsamp(
         lambda ci: sampling.allocate_reservoirs(sample_size, ci, policy=allocation)
     )(c)
     priorities = jax.vmap(lambda k: jax.random.uniform(k, (cap,)))(keys)
-    if getattr(be, "flatten_for_level", False):
-        selected = be.select(
-            keys[0], comp, flat_valid, reservoirs.reshape(-1),
-            n_nodes * num_strata, priorities=priorities.reshape(-1),
-            max_reservoir=max_reservoir,
-        ).reshape(n_nodes, cap)
-    else:
-        selected = jax.vmap(
+
+    def run_select():
+        if getattr(be, "flatten_for_level", False):
+            return be.select(
+                keys[0], comp, flat_valid, reservoirs.reshape(-1),
+                n_nodes * num_strata, priorities=priorities.reshape(-1),
+                max_reservoir=max_reservoir,
+            ).reshape(n_nodes, cap)
+        return jax.vmap(
             lambda k, s, v, r, p: be.select(
                 k, s, v, r, num_strata, priorities=p,
                 max_reservoir=max_reservoir, batch_hint=n_nodes)
         )(keys, strata, valid, reservoirs, priorities)
+
+    # Saturation fast path: when every stratum's reservoir covers its count
+    # (N_i ≥ c_i level-wide — the high-fraction regime), every backend's
+    # mask is provably ``valid`` bit-for-bit (τ sinks below all priorities,
+    # ties resolve to "keep all"), so skip the sort/top-k/kernel pass
+    # entirely. ``cond`` executes one branch at runtime here — this
+    # function sits directly under ``jit``/``lax.scan``, not under a
+    # ``vmap`` that would force both branches.
+    selected = jax.lax.cond(jnp.all(reservoirs >= c), lambda: valid,
+                            run_select)
 
     y, meta = _whs_meta(c, reservoirs, w_in, c_in, async_calibration)
     return SampleResult(

@@ -23,14 +23,30 @@ semantics live):
 * Across intervals the sets are **sticky** (§III-C, Fig. 3): items that
   arrive before their metadata use the most recent saved ``W^in``/``C^in``.
 
-Two implementations share these semantics:
+Three implementations share these semantics:
 
 * ``Window``     — one node's buffer (the per-node loop engine).
 * ``LevelState`` — every node of a level stacked into ``[n_nodes, ...]``
   arrays, so the level-vectorized engine can flush a whole level into one
   jitted dispatch and fold a level step's outputs back in bulk.
+* ``TreeState``  — every level of the whole hierarchy held as a pytree of
+  on-device arrays, so the scan engine (``core.tree``) can run the entire
+  tree — ingest, flush, sample, route, metadata fold — inside one jitted
+  ``lax.scan`` epoch with donated buffers. The host never touches the
+  buffers between ticks.
+
+Accumulator precision: all three keep the interval accumulators in
+**float32 and fold messages in child order**. The scan engine does this
+math in-graph, where float64 is unavailable without globally enabling
+x64 (which would change every PRNG draw), so the host buffers use the
+same f32 sequential accumulation — that is what keeps all three engines
+bit-identical to each other. The merge spans at most a level's fan-in
+messages per interval, so the precision loss vs f64 is ≤ a few ulp on
+the weight sets — orders of magnitude below the sampling variance.
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import numpy as np
 
@@ -50,9 +66,10 @@ class Window:
         self.strata = np.zeros((self.capacity,), np.int32)
         self.fill = 0
         self.dropped = 0
-        # This-interval metadata accumulators: Σ w·C and Σ C per stratum.
-        self._wc_acc = np.zeros((self.num_strata,), np.float64)
-        self._c_acc = np.zeros((self.num_strata,), np.float64)
+        # This-interval metadata accumulators: Σ w·C and Σ C per stratum
+        # (f32, message order — see module docstring on precision).
+        self._wc_acc = np.zeros((self.num_strata,), np.float32)
+        self._c_acc = np.zeros((self.num_strata,), np.float32)
         self._seen = np.zeros((self.num_strata,), bool)
 
     def deliver(self, values: np.ndarray, strata: np.ndarray,
@@ -61,8 +78,8 @@ class Window:
         if weight is not None and count is not None:
             present = np.zeros((self.num_strata,), bool)
             present[np.unique(strata)] = True
-            w = weight.astype(np.float64)
-            c = count.astype(np.float64)
+            w = weight.astype(np.float32)
+            c = count.astype(np.float32)
             self._wc_acc = np.where(present, self._wc_acc + w * c, self._wc_acc)
             self._c_acc = np.where(present, self._c_acc + c, self._c_acc)
             self._seen |= present
@@ -84,7 +101,7 @@ class Window:
         the rest fall back to the sticky values (§III-C)."""
         valid = np.zeros((self.capacity,), bool)
         valid[: self.fill] = True
-        w_merged = self._wc_acc / np.maximum(self._c_acc, 1.0)
+        w_merged = self._wc_acc / np.maximum(self._c_acc, np.float32(1.0))
         w_eff = np.where(self._seen, w_merged, self.w_in).astype(np.float32)
         c_eff = np.where(self._seen, self._c_acc, self.c_in).astype(np.float32)
         self.w_in, self.c_in = w_eff, c_eff  # refresh stickies
@@ -92,6 +109,59 @@ class Window:
                w_eff.copy(), c_eff.copy())
         self._reset()
         return out
+
+
+class TreeState(NamedTuple):
+    """The whole hierarchy's interval state as one on-device pytree.
+
+    Every field is a tuple with one entry per level (levels have distinct
+    node counts and capacities, so the node axis is uniform *within* a
+    level and the level axis is a pytree axis). This is the carry of the
+    scan engine's fused tree-step: ``core.tree`` appends ingest/forwarded
+    items, flushes, and folds metadata entirely in-graph, and the epoch
+    dispatch donates every leaf so reservoir/window buffers are reused
+    in place on device across ticks.
+
+    Per level ``l`` (``n`` nodes, capacity ``M``, ``X`` strata):
+
+    ``values``/``strata``  f32/i32 ``[n, M]`` — item buffers. Flushing
+        only resets ``fill`` (stale slots beyond ``fill`` are masked by
+        the ``valid`` ranges everywhere downstream, exactly like the
+        host engines mask with a fresh-zeroed buffer).
+    ``fill``/``dropped``   i32 ``[n]`` — occupancy + backpressure count.
+    ``w_in``/``c_in``      f32 ``[n, X]`` — sticky W^in/C^in sets.
+    ``wc_acc``/``c_acc``   f32 ``[n, X]`` — this-interval Σw·C / ΣC.
+    ``seen``               bool ``[n, X]`` — strata with fresh metadata.
+    """
+
+    values: tuple
+    strata: tuple
+    fill: tuple
+    dropped: tuple
+    w_in: tuple
+    c_in: tuple
+    wc_acc: tuple
+    c_acc: tuple
+    seen: tuple
+
+    @staticmethod
+    def create(fanin: list[int], capacities: list[int],
+               num_strata: int) -> "TreeState":
+        """Fresh (empty-buffer, identity-metadata) whole-tree state."""
+        import jax.numpy as jnp
+
+        x = num_strata
+        zl = lambda dt: tuple(jnp.zeros((n, c), dt)
+                              for n, c in zip(fanin, capacities))
+        zn = lambda dt: tuple(jnp.zeros((n,), dt) for n in fanin)
+        zx = lambda dt: tuple(jnp.zeros((n, x), dt) for n in fanin)
+        return TreeState(
+            values=zl(jnp.float32), strata=zl(jnp.int32),
+            fill=zn(jnp.int32), dropped=zn(jnp.int32),
+            w_in=tuple(jnp.ones((n, x), jnp.float32) for n in fanin),
+            c_in=zx(jnp.float32), wc_acc=zx(jnp.float32),
+            c_acc=zx(jnp.float32), seen=zx(bool),
+        )
 
 
 class LevelState:
@@ -122,9 +192,10 @@ class LevelState:
         self.strata = np.zeros((n, cap), np.int32)
         self.fill = np.zeros((n,), np.int64)
         self.dropped = np.zeros((n,), np.int64)
-        # This-interval metadata accumulators: Σ w·C and Σ C per stratum.
-        self._wc_acc = np.zeros((n, x), np.float64)
-        self._c_acc = np.zeros((n, x), np.float64)
+        # This-interval metadata accumulators: Σ w·C and Σ C per stratum
+        # (f32, child order — see module docstring on precision).
+        self._wc_acc = np.zeros((n, x), np.float32)
+        self._c_acc = np.zeros((n, x), np.float32)
         self._seen = np.zeros((n, x), bool)
 
     def deliver(self, node: int, values: np.ndarray, strata: np.ndarray,
@@ -134,8 +205,8 @@ class LevelState:
         if weight is not None and count is not None:
             present = np.zeros((self.num_strata,), bool)
             present[np.unique(strata)] = True
-            w = weight.astype(np.float64)
-            c = count.astype(np.float64)
+            w = weight.astype(np.float32)
+            c = count.astype(np.float32)
             self._wc_acc[node] = np.where(
                 present, self._wc_acc[node] + w * c, self._wc_acc[node])
             self._c_acc[node] = np.where(
@@ -176,13 +247,15 @@ class LevelState:
         ``parent_ix[j]`` is the parent of child ``j``; ``present[j, x]``
         marks strata child ``j`` actually forwarded items for (a message
         with no items for a stratum contributes no metadata — exactly
-        ``Window.deliver``'s ``np.unique`` rule). float64 accumulation in
-        child order keeps this bit-identical to per-message delivery.
+        ``Window.deliver``'s ``np.unique`` rule). f32 accumulation in
+        child order keeps this bit-identical to per-message delivery and
+        to the scan engine's in-graph fold.
         """
-        w = weight.astype(np.float64)
-        c = count.astype(np.float64)
-        np.add.at(self._wc_acc, parent_ix, np.where(present, w * c, 0.0))
-        np.add.at(self._c_acc, parent_ix, np.where(present, c, 0.0))
+        w = weight.astype(np.float32)
+        c = count.astype(np.float32)
+        zero = np.float32(0.0)
+        np.add.at(self._wc_acc, parent_ix, np.where(present, w * c, zero))
+        np.add.at(self._c_acc, parent_ix, np.where(present, c, zero))
         np.logical_or.at(self._seen, parent_ix, present)
 
     def due(self, tick: int) -> bool:
@@ -195,7 +268,7 @@ class LevelState:
         otherwise sticky values survive (§III-C).
         """
         valid = np.arange(self.capacity)[None, :] < self.fill[:, None]
-        w_merged = self._wc_acc / np.maximum(self._c_acc, 1.0)
+        w_merged = self._wc_acc / np.maximum(self._c_acc, np.float32(1.0))
         w_eff = np.where(self._seen, w_merged, self.w_in).astype(np.float32)
         c_eff = np.where(self._seen, self._c_acc, self.c_in).astype(np.float32)
         self.w_in, self.c_in = w_eff, c_eff  # refresh stickies

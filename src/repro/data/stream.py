@@ -91,6 +91,89 @@ class StreamSource:
         return (np.concatenate(vals).astype(np.float32),
                 np.concatenate(strs))
 
+    def batch(self, ticks: int, width: int | None = None
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Tick-major batched generation for the scan engine's epoch
+        ingest: ``ticks`` consecutive ``tick()`` draws padded into
+        ``(values f32[T, width], strata i32[T, width], counts i32[T])``.
+        ``width`` defaults to the largest tick; larger ticks are
+        prefix-truncated (the same items a capacity-``width`` buffer
+        would keep). Consumes the source RNG exactly like ``ticks``
+        sequential ``tick()`` calls."""
+        draws = [self.tick() for _ in range(ticks)]
+        if width is None:
+            width = max((len(v) for v, _ in draws), default=0)
+        values = np.zeros((ticks, width), np.float32)
+        strata = np.zeros((ticks, width), np.int32)
+        counts = np.zeros((ticks,), np.int32)
+        for t, (v, s) in enumerate(draws):
+            counts[t] = _pack_prefix(values[t], strata[t], v, s, 0, width)
+        return values, strata, counts
+
+
+def _pack_prefix(dst_v: np.ndarray, dst_s: np.ndarray, v: np.ndarray,
+                 s: np.ndarray, fill: int, width: int) -> int:
+    """THE epoch-ingest backpressure rule, in one place: write the prefix
+    of ``v``/``s`` that fits at ``fill`` in a ``width``-slot row, drop the
+    rest (what a capacity-``width`` buffer keeps). Returns the new fill."""
+    take = min(len(v), width - fill)
+    dst_v[fill:fill + take] = v[:take]
+    dst_s[fill:fill + take] = s[:take]
+    return fill + take
+
+
+@dataclasses.dataclass
+class IngestBatch:
+    """One epoch's worth of source→level-0 ingest, tick-major.
+
+    ``values``/``strata`` are ``[T, n_nodes, width]`` padded arrays,
+    ``counts`` the ``[T, n_nodes]`` per-tick item counts after ``width``
+    truncation — the layout ``HostTree.run_epoch`` moves host→device in
+    one transfer. ``offered`` is the pre-truncation per-(tick, node)
+    count (what the sequential drivers' ``items_ingested`` sees). The
+    exact ground-truth aggregates (pre-truncation, accumulated in the
+    same (tick, source) order as the sequential drivers) ride along for
+    accuracy accounting.
+    """
+
+    values: np.ndarray
+    strata: np.ndarray
+    counts: np.ndarray
+    offered: np.ndarray
+    exact_sum: float
+    exact_count: int
+
+
+def batch_ingest(sources: list[StreamSource], ticks: int, n_nodes: int,
+                 width: int) -> IngestBatch:
+    """Assemble an epoch's ingest for ``n_nodes`` level-0 nodes.
+
+    Source ``i`` feeds node ``i % n_nodes`` (the testbed wiring); per
+    (tick, node) the sources' items are concatenated in source order and
+    prefix-truncated at ``width`` — exactly the order and backpressure a
+    sequential ``ingest()`` loop produces. The source RNGs are consumed
+    tick-major, matching the sequential drivers draw for draw.
+    """
+    values = np.zeros((ticks, n_nodes, width), np.float32)
+    strata = np.zeros((ticks, n_nodes, width), np.int32)
+    counts = np.zeros((ticks, n_nodes), np.int32)
+    offered = np.zeros((ticks, n_nodes), np.int32)
+    exact_sum = 0.0
+    exact_count = 0
+    for t in range(ticks):
+        fill = [0] * n_nodes
+        for i, src in enumerate(sources):
+            v, s = src.tick()
+            exact_sum += float(v.sum())
+            exact_count += len(v)
+            node = i % n_nodes
+            offered[t, node] += len(v)
+            fill[node] = _pack_prefix(values[t, node], strata[t, node],
+                                      v, s, fill[node], width)
+        counts[t] = fill
+    return IngestBatch(values, strata, counts, offered, exact_sum,
+                       exact_count)
+
 
 class TokenStream:
     """LM training stream: ``num_strata`` domains with distinct unigram

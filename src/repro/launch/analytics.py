@@ -63,7 +63,7 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
                  num_sources: int = 8, fanin=(4, 2, 1), interval_ticks=None,
                  allocation: str = "fair", seed: int = 0, mode: str = "whs",
                  engine: str = "level", sampler_backend: str = "topk",
-                 warmup_ticks: int = 0):
+                 warmup_ticks: int = 0, epoch_ticks: int | None = None):
     """Stream → tree → per-window results + ground truth. Returns a dict.
 
     ``capacity=None`` provisions level-0 buffers for the offered load
@@ -74,6 +74,15 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
     ``warmup_ticks`` extra ticks are run first (jit compilation, caches)
     and excluded from the throughput/latency wall-clock measurement —
     accuracy accounting starts after warmup too, so estimates match.
+
+    ``engine="scan"`` batches ``epoch_ticks`` ticks (default:
+    ``min(ticks, 64)`` — bounding the epoch keeps the host-side ingest
+    batch and the stacked per-tick outputs flat in memory and the scan
+    compile time constant for long runs) into one fused dispatch per
+    epoch. Its warmup runs one full epoch (any ``warmup_ticks > 0``
+    requests it) so the measured epochs hit a compiled program, and
+    ``ticks`` is rounded up to whole epochs so every dispatch reuses
+    the one compiled scan length.
     """
     if capacity is None:
         per_node_rate = sum(s.rate for s in specs) * num_sources / fanin[0]
@@ -84,11 +93,23 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
                       engine, sampler_backend)
     sources = [S.StreamSource(specs, seed=seed * 977 + i)
                for i in range(num_sources)]
-    for t in range(1, warmup_ticks + 1):
-        for i, src in enumerate(sources):
-            vals, strs = src.tick()
-            tree.ingest(i % tree.fanin[0], vals, strs)
-        tree.tick(t)
+
+    if engine == "scan":
+        epoch_t = min(epoch_ticks or 64, ticks)
+        n_epochs = -(-ticks // epoch_t)  # ceil: whole epochs only
+        width = tree.capacities[0]
+        t0_tick = 1
+        if warmup_ticks > 0:  # one full epoch: compiles the scan program
+            wb = S.batch_ingest(sources, epoch_t, tree.fanin[0], width)
+            tree.run_epoch(t0_tick, wb.values, wb.strata, wb.counts,
+                           offered=wb.offered)
+            t0_tick += epoch_t
+    else:
+        for t in range(1, warmup_ticks + 1):
+            for i, src in enumerate(sources):
+                vals, strs = src.tick()
+                tree.ingest(i % tree.fanin[0], vals, strs)
+            tree.tick(t)
     # reset accounting after warmup
     tree.results.clear()
     tree.items_ingested = 0
@@ -99,13 +120,21 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
     exact_sum = 0.0
     exact_cnt = 0
     t0 = time.time()
-    for t in range(warmup_ticks + 1, warmup_ticks + ticks + 1):
-        for i, src in enumerate(sources):
-            vals, strs = src.tick()
-            exact_sum += float(vals.sum())
-            exact_cnt += len(vals)
-            tree.ingest(i % tree.fanin[0], vals, strs)
-        tree.tick(t)
+    if engine == "scan":
+        for e in range(n_epochs):
+            b = S.batch_ingest(sources, epoch_t, tree.fanin[0], width)
+            exact_sum += b.exact_sum
+            exact_cnt += b.exact_count
+            tree.run_epoch(t0_tick + e * epoch_t, b.values, b.strata,
+                           b.counts, offered=b.offered)
+    else:
+        for t in range(warmup_ticks + 1, warmup_ticks + ticks + 1):
+            for i, src in enumerate(sources):
+                vals, strs = src.tick()
+                exact_sum += float(vals.sum())
+                exact_cnt += len(vals)
+                tree.ingest(i % tree.fanin[0], vals, strs)
+            tree.tick(t)
     wall = time.time() - t0
 
     approx_sum = float(sum(r["sum"] for r in tree.results))
@@ -168,9 +197,14 @@ def main(argv=None):
     ap.add_argument("--allocation", default="fair",
                     choices=["fair", "proportional"])
     ap.add_argument("--mode", default="whs", choices=["whs", "srs"])
-    ap.add_argument("--engine", default="level", choices=["level", "loop"],
+    ap.add_argument("--engine", default="level",
+                    choices=["level", "loop", "scan"],
                     help="level = one jitted dispatch per level per tick; "
-                         "loop = per-node reference engine")
+                         "loop = per-node reference engine; scan = whole "
+                         "tree fused, one dispatch per epoch of ticks")
+    ap.add_argument("--epoch-ticks", type=int, default=None,
+                    help="scan engine: ticks fused per epoch dispatch "
+                         "(default: min(ticks, 64))")
     ap.add_argument("--backend", default="topk",
                     choices=["argsort", "topk", "pallas"],
                     help="sampler selection backend: argsort = lexsort "
@@ -190,7 +224,7 @@ def main(argv=None):
     r = run_pipeline(specs, fraction=args.fraction, ticks=args.ticks,
                      allocation=args.allocation, mode=args.mode,
                      engine=args.engine, sampler_backend=args.backend,
-                     warmup_ticks=2)
+                     warmup_ticks=2, epoch_ticks=args.epoch_ticks)
     print(f"dist={args.dist} mode={args.mode} engine={args.engine} "
           f"backend={args.backend} fraction={r['fraction']:.0%}")
     print(f"  SUM ≈ {r['approx_sum']:.4e} ± {r['bound_2sigma']:.2e} "

@@ -18,6 +18,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 def _axes(mesh: Mesh):
     names = mesh.axis_names
     batch = tuple(a for a in ("pod", "data") if a in names)
+    if len(batch) == 1:
+        # Bare name, not a 1-tuple: PartitionSpec treats P(("data",)) and
+        # P("data") as distinct specs, and consumers compare against the
+        # bare-name form.
+        batch = batch[0]
     fsdp = batch  # ZeRO across pods too
     model = "model" if "model" in names else None
     return batch or None, (fsdp or None), model
