@@ -1,0 +1,197 @@
+"""Fig. 8* — query-plane accuracy vs sampling fraction + closed-loop
+error-budget convergence. ("Fig. 8" in the paper is bandwidth; this is
+the companion accuracy study the query plane enables: per-standing-query
+relative error as the fraction sweeps 0.1→0.8, and the §IV-B adaptive
+feedback loop converging onto a target error budget.)
+
+Part A: a K=8 standing-query registry (sum/count/mean, 2 histograms,
+2 quantile sketches, heavy hitters) rides the scan engine across the
+fraction sweep with common random numbers (same seeds per fraction);
+per-query relative errors are measured against exact ground truth over
+the collected stream. Expectation (asserted downstream): CLT-query
+errors fall monotonically in fraction, the quantile sketch's measured
+rank error stays within its configured bound.
+
+Part B: the BudgetController drives per-level sample budgets from each
+epoch's measured relative ±2σ error toward ``TARGET_REL_ERROR``;
+the trajectory (budget, estimated + true rel error per epoch) is
+recorded and the convergence epoch reported.
+
+Writes rows to ``benchmarks/results/fig8_accuracy.json`` (via common.save)
+and the headline trajectory to ``BENCH_fig8.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.data import stream as S
+from repro.launch.analytics import run_pipeline
+from repro.query.registry import QueryRegistry
+from repro.query.sketches import quantile_rank_error_bound
+
+from benchmarks import common
+
+FRACTIONS = (0.1, 0.2, 0.4, 0.6, 0.8)
+TICKS = 12
+SEEDS = (1, 2, 3, 4, 5)
+TARGET_REL_ERROR = 0.02
+CTRL_EPOCH_TICKS = 4
+CTRL_EPOCHS = 28
+QUANTILES = (0.5, 0.9, 0.99)
+SKETCH_CAPACITY = 256
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fig8.json"
+
+
+def k8_registry() -> QueryRegistry:
+    """The K=8 standing-query mix exercised by tests and this benchmark."""
+    return (QueryRegistry()
+            .register_sum()
+            .register_count()
+            .register_mean()
+            .register_histogram("hist_coarse", 0.0, 120_000.0, 16)
+            .register_histogram("hist_fine", 0.0, 2_000.0, 32)
+            .register_quantile("quantiles", QUANTILES,
+                               capacity=SKETCH_CAPACITY)
+            .register_quantile("median", (0.5,), capacity=64)
+            .register_heavy_hitters("heavy", k=8, width=1024, depth=4))
+
+
+def _per_query_errors(plan, r: dict) -> dict:
+    """Relative error per query kind vs ``plan.exact_answers`` ground
+    truth on the run's own stream (CLT queries aggregate across windows;
+    sketches answer over the whole stream at the last window)."""
+    lay = plan.layout()
+    answers = np.stack(r["windows_answers"])          # [W, n_out]
+    values = r["stream_values"].astype(np.float64)
+    exact = plan.exact_answers(values)
+    out = {}
+
+    o_sum, o_cnt = lay["sum"][0], lay["count"][0]
+    out["sum"] = (abs(answers[:, o_sum].sum() - exact[o_sum])
+                  / max(abs(exact[o_sum]), 1e-9))
+    out["count"] = (abs(answers[:, o_cnt].sum() - exact[o_cnt])
+                    / max(exact[o_cnt], 1e-9))
+    mean_est = answers[:, o_sum].sum() / max(answers[:, o_cnt].sum(), 1e-9)
+    o_mean = lay["mean"][0]
+    out["mean"] = (abs(mean_est - exact[o_mean])
+                   / max(abs(exact[o_mean]), 1e-9))
+    o, w, _ = lay["hist_coarse"]
+    est_h = answers[:, o:o + w].sum(axis=0)
+    out["histogram_l1"] = np.abs(est_h - exact[o:o + w]).sum() / len(values)
+    # quantile rank error: measured rank of each reported value vs target
+    o, w, _ = lay["quantiles"]
+    ranks = [(values <= v).mean() for v in answers[-1, o:o + w]]
+    out["quantile_rank"] = float(max(abs(rk - q)
+                                     for rk, q in zip(ranks, QUANTILES)))
+    # heavy hitters: worst relative count error over the sketch's
+    # reported keys (the sketch's key set need not equal the true top-k,
+    # so true counts come from the raw stream, not exact_answers' slots)
+    o, w, _ = lay["heavy"]
+    k = w // 2
+    keys = answers[-1, o:o + k].astype(np.int64)
+    ests = answers[-1, o + k:o + w]
+    all_keys = np.round(values).astype(np.int64)
+    # empty slots carry est == 0 (their sentinel key does not survive the
+    # f32 answer round-trip exactly, so gate on the estimate instead)
+    errs = [abs(e - (all_keys == kk).sum()) / len(values)
+            for kk, e in zip(keys, ests) if e > 0]
+    out["heavy_hitter_count"] = float(max(errs)) if errs else 0.0
+    return out
+
+
+def run() -> list[dict]:
+    rows = []
+    q_bound = quantile_rank_error_bound(SKETCH_CAPACITY)
+    fractions = FRACTIONS[:2] if common.QUICK else FRACTIONS
+    seeds = SEEDS[:1] if common.QUICK else SEEDS
+    ticks = 6 if common.QUICK else TICKS
+
+    # -------- Part A: accuracy vs fraction (common random numbers) ------
+    plan = k8_registry().compile(num_strata=4)
+    for f in fractions:
+        errs = []
+        for s in seeds:
+            r = run_pipeline(S.paper_gaussian(), fraction=f, ticks=ticks,
+                             seed=s, engine="scan", warmup_ticks=1,
+                             queries=k8_registry(), return_stream=True)
+            errs.append(_per_query_errors(plan, r))
+        row = {"fraction": f}
+        for key in errs[0]:
+            row[f"rel_{key}"] = float(np.mean([e[key] for e in errs]))
+        row["quantile_bound"] = q_bound
+        row["quantile_within_bound"] = bool(
+            row["rel_quantile_rank"] <= q_bound)
+        rows.append(row)
+    common.table("Fig. 8* per-query relative error vs sampling fraction",
+                 rows)
+    clt_cols = ("rel_sum", "rel_count", "rel_mean")
+    mono = all(rows[i][c] >= rows[i + 1][c]
+               for c in clt_cols for i in range(len(rows) - 1))
+    print(f"CLT-query errors monotone decreasing in fraction: {mono}")
+    print(f"quantile rank error within configured bound {q_bound:.4f}: "
+          f"{all(r['quantile_within_bound'] for r in rows)}")
+
+    # -------- Part B: closed-loop error-budget convergence --------------
+    ctrl_epochs = 6 if common.QUICK else CTRL_EPOCHS
+    # start far below the needed budget: the controller must grow the
+    # sample onto the target (§IV-B's "grow when the budget is violated")
+    rc = run_pipeline(S.paper_gaussian(), fraction=0.005,
+                      ticks=ctrl_epochs * CTRL_EPOCH_TICKS,
+                      epoch_ticks=CTRL_EPOCH_TICKS, seed=11, engine="scan",
+                      warmup_ticks=1, queries=k8_registry(),
+                      target_rel_error=TARGET_REL_ERROR, max_fraction=0.8)
+    traj = rc["controller"]
+    tol = 0.1 * TARGET_REL_ERROR
+    converged = next((t["step"] + 1 for t in traj
+                      if abs(t["rel_error"] - TARGET_REL_ERROR) <= tol
+                      or t["rel_error"] <= TARGET_REL_ERROR), None)
+    ctrl_row = {
+        "fraction": "controller", "target_rel_error": TARGET_REL_ERROR,
+        "epochs_to_target": converged, "epochs_run": len(traj),
+        "final_rel_error": traj[-1]["rel_error"] if traj else None,
+        "final_size": traj[-1]["size"] if traj else None,
+    }
+    rows.append(ctrl_row)
+    common.table("Fig. 8* error-budget controller", [ctrl_row])
+    print("trajectory (epoch, budget, rel ±2σ):")
+    for t in traj:
+        print(f"  {t['step']:>3}  size={t['size']:>5}  "
+              f"rel={t['rel_error']:.4f}")
+
+    common.save("fig8_accuracy", rows + [{"trajectory": traj}])
+    if not common.QUICK:
+        _record_bench(rows, traj)
+    return rows
+
+
+def _record_bench(rows: list[dict], traj: list[dict]) -> None:
+    """Append/refresh the headline BENCH_fig8.json trajectory entry."""
+    payload = {"runs": []}
+    if BENCH_PATH.exists():
+        payload = json.loads(BENCH_PATH.read_text())
+    payload["runs"] = [r for r in payload.get("runs", [])
+                       if r.get("label") != "pr3-query-plane"]
+    payload["runs"].append({
+        "label": "pr3-query-plane",
+        "notes": "K=8 standing queries on engine=scan; per-query rel error "
+                 "vs fraction (CRN over seeds) + closed-loop error budget",
+        "accuracy_vs_fraction": [r for r in rows
+                                 if not isinstance(r["fraction"], str)],
+        "controller": {
+            "target_rel_error": TARGET_REL_ERROR,
+            "epochs_to_target": next(
+                (r["epochs_to_target"] for r in rows
+                 if r.get("fraction") == "controller"), None),
+            "trajectory": traj,
+        },
+    })
+    BENCH_PATH.write_text(json.dumps(payload, indent=1, default=str))
+    print(f"wrote {BENCH_PATH}")
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,7 @@ trajectories instead of scraping stdout.
 Modules:
     fig6   accuracy vs sampling fraction (WHS vs SRS; Gaussian/Poisson)
     fig7   throughput + bandwidth vs fraction (WHS/SRS/native)   [Figs 7+8]
+    fig8   query-plane per-query accuracy + error-budget loop    [Fig 8*]
     fig9   latency vs fraction and vs window size                [Figs 9+10]
     fig11  fluctuating arrival rates + heavy skew                [Fig 11a-c]
     fig12  real-world-like datasets (taxi, pollution)            [Fig 12]
@@ -25,8 +26,8 @@ import sys
 import time
 import traceback
 
-MODULES = ("fig6", "fig7", "fig9", "fig11", "fig12", "train", "kernels",
-           "roofline")
+MODULES = ("fig6", "fig7", "fig8", "fig9", "fig11", "fig12", "train",
+           "kernels", "roofline")
 
 
 def main(argv=None) -> int:
@@ -39,9 +40,9 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all module result rows to PATH as JSON")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke mode: quick-aware modules (fig7) shrink "
-                         "their ticks/sweeps/reps to run in seconds; pair "
-                         "with --only to restrict to them (wiring check "
+                    help="CI smoke mode: quick-aware modules (fig7, fig8) "
+                         "shrink their ticks/sweeps/reps to run in seconds; "
+                         "pair with --only to restrict to them (wiring check "
                          "only, numbers are not trajectory-grade)")
     args = ap.parse_args(argv)
     chosen = args.only.split(",") if args.only else list(MODULES)
@@ -50,11 +51,12 @@ def main(argv=None) -> int:
         from benchmarks import common
         common.QUICK = True
 
-    from benchmarks import (fig6_accuracy, fig7_throughput, fig9_latency,
-                            fig11_skew, fig12_realworld, kernels_micro,
-                            roofline, train_plane)
+    from benchmarks import (fig6_accuracy, fig7_throughput, fig8_accuracy,
+                            fig9_latency, fig11_skew, fig12_realworld,
+                            kernels_micro, roofline, train_plane)
     impl = {
-        "fig6": fig6_accuracy, "fig7": fig7_throughput, "fig9": fig9_latency,
+        "fig6": fig6_accuracy, "fig7": fig7_throughput,
+        "fig8": fig8_accuracy, "fig9": fig9_latency,
         "fig11": fig11_skew, "fig12": fig12_realworld, "train": train_plane,
         "kernels": kernels_micro, "roofline": roofline,
     }

@@ -46,6 +46,16 @@ def approx_sum(
 ) -> QueryResult:
     """``SUM_* ± bound`` (Eq. 3 + Eq. 11)."""
     y, s1, s2 = stratum_moments(value, stratum, selected, num_strata)
+    return approx_sum_from_moments(y, s1, s2, meta)
+
+
+def approx_sum_from_moments(
+    y: jnp.ndarray, s1: jnp.ndarray, s2: jnp.ndarray, meta: StratumMeta
+) -> QueryResult:
+    """Eq. 3 + Eq. 11 from precomputed per-stratum moments.
+
+    Split out so a fused multi-query evaluation (``repro.query.compiler``)
+    can share ONE ``stratum_moments`` pass across every CLT query."""
     s_sq = sample_variance(y, s1, s2)
     est_per = s1 * meta.weight                       # Eq. 2/4
     c_src = y * meta.weight                          # §III-D
@@ -63,6 +73,13 @@ def approx_mean(
 ) -> QueryResult:
     """``MEAN_* ± bound`` (Eq. 13 + Eq. 14)."""
     y, s1, s2 = stratum_moments(value, stratum, selected, num_strata)
+    return approx_mean_from_moments(y, s1, s2, meta)
+
+
+def approx_mean_from_moments(
+    y: jnp.ndarray, s1: jnp.ndarray, s2: jnp.ndarray, meta: StratumMeta
+) -> QueryResult:
+    """Eq. 13 + Eq. 14 from precomputed per-stratum moments."""
     s_sq = sample_variance(y, s1, s2)
     c_src = y * meta.weight
     total = jnp.maximum(jnp.sum(c_src), 1.0)

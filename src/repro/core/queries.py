@@ -49,13 +49,13 @@ def weighted_histogram(
     est = jnp.zeros((nbins,), jnp.float32).at[jnp.where(sel, bin_ix, nbins - 1)].add(
         jnp.where(sel, w_item, 0.0)
     )
-    # Per-bin Bernoulli-in-stratum variance, aggregated over strata: for an
-    # indicator query, s² within stratum is p(1-p); use the plug-in estimate.
-    y_i, _, _ = err.stratum_moments(batch.value, batch.stratum, sel, num_strata)
-    var = jnp.zeros((nbins,), jnp.float32)
-    # Plug-in: var_bin ≈ Σ_items w_item·(w_item−1) over sampled items in bin.
+    # Per-bin plug-in variance: var_bin ≈ Σ_items w_item·(w_item−1) over
+    # sampled items in the bin (Bernoulli-in-stratum indicator queries;
+    # exactly 0 at fraction 1.0 where every w_item == 1).
     contrib = jnp.where(sel, w_item * jnp.maximum(w_item - 1.0, 0.0), 0.0)
-    var = var.at[jnp.where(sel, bin_ix, nbins - 1)].add(contrib)
+    var = jnp.zeros((nbins,), jnp.float32).at[
+        jnp.where(sel, bin_ix, nbins - 1)
+    ].add(contrib)
     return QueryResult(estimate=est, variance=var)
 
 

@@ -131,11 +131,21 @@ def _route_pack(values_c, strata_c, valid_c, child_of: np.ndarray):
 # --------------------------------------------------------------------------
 def _whs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
                    sample_size, *, num_strata, allocation, backend, budget,
-                   hist_bins=64):
+                   hist_bins=64, plan=None, qstate=()):
     """Root = sampling + the user query (§III-A lines 16-20). The query here
     is the paper's evaluation workload: windowed SUM and MEAN with error
     bounds, plus a value histogram (a representative GROUP-BY aggregate —
-    the datacenter node runs the real analytics, not just the sampler)."""
+    the datacenter node runs the real analytics, not just the sampler).
+
+    ``plan`` (a ``repro.query.compiler.CompiledQueryPlan``) extends the
+    workload with the continuous query plane: every registered standing
+    query is answered from the SAME window sample in the same traced
+    program — the plan consumes no sampler randomness (its PRNG stream is
+    a ``fold_in`` side-branch of the node key), so sample state is
+    bit-identical with or without queries registered. Returns
+    ``(outs, qstate')`` where ``outs`` gains ``(answers, bounds)``
+    f32[plan.n_out] tails when a plan is present.
+    """
     from repro.core import queries
 
     k = _node_key(key, t, lvl, 0)
@@ -149,8 +159,12 @@ def _whs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
     hi = jnp.max(jnp.where(res.selected, batch.value, -jnp.inf))
     edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
     h = queries.weighted_histogram(batch, res, num_strata, edges)
-    return (s.estimate, s.variance, m.estimate, m.variance,
+    outs = (s.estimate, s.variance, m.estimate, m.variance,
             jnp.sum(res.selected.astype(jnp.int32)), h.estimate)
+    if plan is None:
+        return outs, ()
+    qstate2, answers, bounds = plan.evaluate(k, batch, res, qstate)
+    return outs + (answers, bounds), qstate2
 
 
 def _srs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
@@ -241,10 +255,27 @@ def _root_step(capacity: int, num_strata: int, allocation: str, backend: str,
                lvl: int, budget: int, hist_bins: int = 64):
     @jax.jit
     def step(key, t, values, strata, valid, w_in, c_in, sample_size):
+        outs, _ = _whs_root_core(key, t, lvl, values, strata, valid, w_in,
+                                 c_in, sample_size, num_strata=num_strata,
+                                 allocation=allocation, backend=backend,
+                                 budget=budget, hist_bins=hist_bins)
+        return outs
+
+    return step
+
+
+def _plan_root_step(plan, num_strata: int, allocation: str,
+                    backend: str, lvl: int, budget: int):
+    """Per-tree jitted root step for the ``level``/``loop`` engines when a
+    query plan is registered: the host threads the sketch state through
+    (donated — same shapes in and out, so XLA updates it in place)."""
+
+    @functools.partial(jax.jit, donate_argnums=(7,))
+    def step(key, t, values, strata, valid, w_in, c_in, qstate, sample_size):
         return _whs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
                               sample_size, num_strata=num_strata,
                               allocation=allocation, backend=backend,
-                              budget=budget, hist_bins=hist_bins)
+                              budget=budget, plan=plan, qstate=qstate)
 
     return step
 
@@ -391,9 +422,9 @@ def _flush_meta(wc_acc, c_acc, seen, w_in, c_in):
 
 def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                      num_strata, allocation, backend, mode, p_level,
-                     fraction, trace_counter=None):
-    """Build the fused whole-tree tick: ``(state, key, t, ingest) →
-    (state', per-tick outputs)``.
+                     fraction, trace_counter=None, plan=None):
+    """Build the fused whole-tree tick: ``(state, key, t, budgets, ingest)
+    → (state', per-tick outputs)``.
 
     Levels are chained in-graph exactly like ``_tick_level`` chains them on
     the host: level ``l`` flushes, samples, and its packed forwards are
@@ -402,6 +433,17 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
     has not elapsed are gated with ``where`` (their buffers keep
     accumulating); with all-1 intervals (the paper topology) the gates are
     static and the graph is branch-free.
+
+    ``sample_sizes`` here are the *static maximum* per-level budgets —
+    they size the forwarding buffers and partial selections. The budgets
+    actually applied each tick arrive as the traced ``budgets`` f32
+    [n_levels] argument, so the closed-loop ``BudgetController`` can move
+    per-level sample sizes between epochs without a single retrace.
+
+    ``plan`` is the compiled continuous-query plan (or ``None``): the
+    root's standing queries evaluate inside this same traced tick, with
+    their sketch state carried in ``state.qstate`` (donated with the
+    rest of ``TreeState``).
     """
     from repro.core.window import TreeState
 
@@ -409,10 +451,10 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
     child_tables = [_child_routing(fanin[l], fanin[l + 1])
                     for l in range(n_levels - 1)]
 
-    def tick(state: "TreeState", key, t, ing_v, ing_s, ing_n):
+    def tick(state: "TreeState", key, t, budgets, ing_v, ing_s, ing_n):
         if trace_counter is not None:
             trace_counter["traces"] += 1
-        lv = {f: list(getattr(state, f)) for f in TreeState._fields}
+        lv = {f: list(getattr(state, f)) for f in TreeState.LEVEL_FIELDS}
 
         # Source → level-0 delivery (one slice of the epoch's ingest batch).
         # With a 1-tick level-0 interval the buffer is empty here (it
@@ -455,15 +497,16 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                             key, t, l, values[0], strata[0], valid[0],
                             w_eff[0], c_eff[0], jnp.float32(p_level),
                             jnp.float32(fraction), num_strata=num_strata)
+                        q_new = state.qstate
                     else:
-                        outs = _whs_root_core(
+                        outs, q_new = _whs_root_core(
                             key, t, l, values[0], strata[0], valid[0],
-                            w_eff[0], c_eff[0],
-                            jnp.float32(sample_sizes[l]),
+                            w_eff[0], c_eff[0], budgets[l],
                             num_strata=num_strata, allocation=allocation,
-                            backend=backend, budget=int(sample_sizes[l]))
+                            backend=backend, budget=int(sample_sizes[l]),
+                            plan=plan, qstate=state.qstate)
                     root_ok = jnp.sum(fill) > 0
-                    return ((root_ok,) + outs) + reset
+                    return ((root_ok,) + outs, reset, q_new)
                 if mode == "srs":
                     (packed_v, packed_s, n_deliv, w_out, c_out, present,
                      n_fwd) = _srs_level_core(
@@ -475,7 +518,7 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                     (packed_v, packed_s, n_deliv, w_out, c_out, present,
                      n_fwd) = _whs_level_core(
                         key, t, l, values, strata, valid, w_eff, c_eff,
-                        jnp.float32(sample_sizes[l]), num_strata=num_strata,
+                        budgets[l], num_strata=num_strata,
                         out_capacity=int(sample_sizes[l]),
                         child_of=child_tables[l],
                         allocation=allocation, backend=backend)
@@ -501,7 +544,10 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                     nul = (jnp.zeros((), bool), f32(), f32(), f32(), f32(),
                            jnp.zeros((), jnp.int32),
                            jnp.zeros((64,), jnp.float32))
-                    return nul + keep
+                    if plan is not None:
+                        nul = nul + (jnp.zeros((plan.n_out,), jnp.float32),
+                                     jnp.zeros((plan.n_out,), jnp.float32))
+                    return (nul, keep, state.qstate)
                 nul = (lv["values"][l + 1], lv["strata"][l + 1],
                        lv["fill"][l + 1], lv["dropped"][l + 1],
                        lv["wc_acc"][l + 1], lv["c_acc"][l + 1],
@@ -517,8 +563,7 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                 out = jax.lax.cond(t % iv == 0, run_level, skip_level)
 
             if is_root:
-                root_out = out[:7]
-                tail = out[7:]
+                root_out, tail, q_out = out
             else:
                 (lv["values"][l + 1], lv["strata"][l + 1], lv["fill"][l + 1],
                  lv["dropped"][l + 1], lv["wc_acc"][l + 1],
@@ -528,7 +573,9 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
             (lv["fill"][l], lv["wc_acc"][l], lv["c_acc"][l], lv["seen"][l],
              lv["w_in"][l], lv["c_in"][l]) = tail
 
-        new_state = TreeState(**{f: tuple(lv[f]) for f in TreeState._fields})
+        new_state = TreeState(
+            **{f: tuple(lv[f]) for f in TreeState.LEVEL_FIELDS},
+            qstate=q_out)
         out = root_out + (jnp.stack(n_fwd_levels),)
         return new_state, out
 
@@ -540,12 +587,12 @@ def _build_epoch_fn(tick_fn, epoch_ticks: int):
     over the fused tree-step, every ``TreeState`` buffer donated so the
     reservoir/window state is updated in place on device."""
 
-    def epoch(state, key, t0, ing_v, ing_s, ing_n):
+    def epoch(state, key, t0, budgets, ing_v, ing_s, ing_n):
         ts = t0 + jnp.arange(epoch_ticks, dtype=jnp.int32)
 
         def body(st, xs):
             t, v, s, n = xs
-            return tick_fn(st, key, t, v, s, n)
+            return tick_fn(st, key, t, budgets, v, s, n)
 
         return jax.lax.scan(body, state, (ts, ing_v, ing_s, ing_n))
 
@@ -597,6 +644,16 @@ class HostTree:
         # and ~1.7x faster on CPU — the tree defaults to it; the library
         # functions keep the argsort reference as their default.
         sampler_backend: str = "topk",
+        # Continuous query plane: a QueryRegistry (or compiled plan) of
+        # standing queries answered at the root every window, inside the
+        # same dispatch(es). whs mode only (the plan needs WHS metadata).
+        queries=None,
+        # Static per-level budget ceilings for the closed-loop controller:
+        # buffers/partial selections are provisioned for these, while
+        # ``set_sample_sizes`` moves the applied budgets anywhere below
+        # them between ticks/epochs with zero retraces. Defaults to
+        # ``sample_sizes`` (fixed-budget operation).
+        max_sample_sizes: list[int] | None = None,
     ):
         from repro.core.window import LevelState, TreeState, Window
 
@@ -606,11 +663,20 @@ class HostTree:
         self.fanin = fanin
         self.num_strata = num_strata
         self.allocation = allocation
-        self.sample_sizes = sample_sizes
+        self.sample_sizes = list(sample_sizes)
+        self.max_sample_sizes = list(max_sample_sizes or sample_sizes)
+        assert all(m >= s for m, s in zip(self.max_sample_sizes,
+                                          self.sample_sizes)), \
+            "max_sample_sizes must dominate the initial sample_sizes"
         self.mode = mode
         self.engine = engine
         self.sampler_backend = sampler_backend
         self.fraction = fraction
+        if queries is not None and not hasattr(queries, "evaluate"):
+            queries = queries.compile(num_strata)
+        self.plan = queries
+        assert self.plan is None or mode == "whs", \
+            "the query plane needs WHS stratum metadata (mode='whs')"
         # SRS keeps items with the same probability at every level so the
         # compounded keep-rate equals the end-to-end ``fraction``.
         self.p_level = (float(fraction) ** (1.0 / len(fanin))
@@ -631,8 +697,8 @@ class HostTree:
                 # buffers — and their sort/top-k passes — half the slots.)
                 children_per_parent = -(-n_nodes // fanin[lvl + 1])  # ceil
                 flushes = -(-interval_ticks[lvl + 1] // interval_ticks[lvl])
-                cap = max(sample_sizes[lvl] * children_per_parent * flushes,
-                          64)
+                cap = max(self.max_sample_sizes[lvl] * children_per_parent
+                          * flushes, 64)
         if engine == "loop":
             self.levels = [
                 [Window(self.capacities[lvl], num_strata, interval_ticks[lvl])
@@ -648,12 +714,22 @@ class HostTree:
         else:  # scan: whole-tree on-device state, one dispatch per epoch
             self.levels = None
             self._state = TreeState.create(fanin, self.capacities, num_strata)
+            if self.plan is not None:
+                self._state = self._state._replace(
+                    qstate=self.plan.init_state())
             self._trace_counter = {"traces": 0}
             self._tick_fn = _build_scan_tick(
-                fanin, self.capacities, sample_sizes, interval_ticks,
+                fanin, self.capacities, self.max_sample_sizes, interval_ticks,
                 num_strata, allocation, sampler_backend, mode, self.p_level,
-                fraction, trace_counter=self._trace_counter)
+                fraction, trace_counter=self._trace_counter, plan=self.plan)
             self._epoch_fns: dict[int, object] = {}
+        if engine != "scan" and self.plan is not None:
+            # level/loop engines: host-threaded sketch state + a dedicated
+            # root step closing over the plan.
+            self._qstate = self.plan.init_state()
+            self._plan_step = _plan_root_step(
+                self.plan, num_strata, allocation, sampler_backend,
+                len(fanin) - 1, int(self.max_sample_sizes[-1]))
         self._key = jax.random.PRNGKey(seed)
         self.items_forwarded = [0] * len(fanin)   # bandwidth accounting (Fig. 8)
         self.items_ingested = 0
@@ -707,13 +783,20 @@ class HostTree:
         if fn is None:
             fn = self._epoch_fns[epoch_ticks] = _build_epoch_fn(
                 self._tick_fn, epoch_ticks)
+        budgets = jnp.asarray([float(s) for s in self.sample_sizes],
+                              jnp.float32)
         t_start = _time.perf_counter()
         self._state, outs = fn(
-            self._state, self._key, jnp.int32(t0),
+            self._state, self._key, jnp.int32(t0), budgets,
             jnp.asarray(values, jnp.float32), jnp.asarray(strata, jnp.int32),
             jnp.asarray(counts, jnp.int32))
-        (root_ok, se, sv, me, mv, nsel, hist, n_fwd) = (
-            np.asarray(o) for o in outs)          # one device→host sync
+        if self.plan is not None:
+            (root_ok, se, sv, me, mv, nsel, hist, ans, bnd, n_fwd) = (
+                np.asarray(o) for o in outs)      # one device→host sync
+        else:
+            (root_ok, se, sv, me, mv, nsel, hist, n_fwd) = (
+                np.asarray(o) for o in outs)
+            ans = bnd = None
         wall = _time.perf_counter() - t_start
         self.dispatch_count += 1
         # Slot-proportional level-time attribution (class docstring).
@@ -727,11 +810,49 @@ class HostTree:
             self.items_forwarded[lvl] += int(n_fwd[:, lvl].sum())
         for i in range(epoch_ticks):
             if root_ok[i]:
-                self.results.append(dict(
+                row = dict(
                     tick=t0 + i, sum=float(se[i]), sum_var=float(sv[i]),
                     mean=float(me[i]), mean_var=float(mv[i]),
                     n_sampled=int(nsel[i]), histogram=hist[i],
-                ))
+                )
+                if ans is not None:
+                    row["answers"], row["bounds"] = ans[i], bnd[i]
+                self.results.append(row)
+
+    def reset_query_state(self) -> None:
+        """Reset the standing queries' sketch state to empty (drivers call
+        this after warmup so continuous answers cover only measured
+        ticks; windowed CLT answers are stateless and unaffected)."""
+        if self.plan is None:
+            return
+        if self.engine == "scan":
+            self._state = self._state._replace(qstate=self.plan.init_state())
+        else:
+            self._qstate = self.plan.init_state()
+
+    def set_sample_sizes(self, sizes) -> None:
+        """Move the applied per-level sample budgets (closed-loop knob).
+
+        Budgets are traced values in every engine, so this never
+        recompiles; they are clamped to the provisioned
+        ``max_sample_sizes`` ceilings (buffers upstream were sized for
+        those — exceeding them would truncate forwards)."""
+        assert len(sizes) == len(self.fanin)
+        self.sample_sizes = [
+            min(max(float(s), 1.0), float(m))
+            for s, m in zip(sizes, self.max_sample_sizes)
+        ]
+
+    def _root_result(self, t: int, outs) -> dict:
+        """Host-side result row from a root step's outputs (plan-aware)."""
+        se, sv, me, mv, nsel, hist = outs[:6]
+        row = dict(tick=t, sum=float(se), sum_var=float(sv),
+                   mean=float(me), mean_var=float(mv), n_sampled=int(nsel),
+                   histogram=np.asarray(hist))
+        if len(outs) > 6:
+            row["answers"] = np.asarray(outs[6])
+            row["bounds"] = np.asarray(outs[7])
+        return row
 
     # ------------------------------------------------------------- loop --
     def _tick_loop(self, t: int) -> None:
@@ -748,27 +869,26 @@ class HostTree:
                 if is_root:
                     if self.mode == "srs":
                         step = _srs_root_step(win.capacity, self.num_strata, lvl)
-                        se, sv, me, mv, nsel, hist = step(
+                        outs = step(
                             self._key, t, values, strata, valid, w_in, c_in,
                             jnp.float32(self.p_level), jnp.float32(self.fraction))
+                    elif self.plan is not None:
+                        outs, self._qstate = self._plan_step(
+                            self._key, t, values, strata, valid, w_in, c_in,
+                            self._qstate, jnp.float32(self.sample_sizes[lvl]))
                     else:
                         step = _root_step(win.capacity, self.num_strata,
                                           self.allocation, self.sampler_backend,
-                                          lvl, int(self.sample_sizes[lvl]))
-                        se, sv, me, mv, nsel, hist = step(
+                                          lvl, int(self.max_sample_sizes[lvl]))
+                        outs = step(
                             self._key, t, values, strata, valid, w_in, c_in,
                             jnp.float32(self.sample_sizes[lvl]))
                     self.dispatch_count += 1
-                    hist = np.asarray(hist)
-                    se = float(se)
+                    row = self._root_result(t, outs)  # np.asarray syncs
                     self.level_time_s[lvl] += _time.perf_counter() - t0
-                    self.results.append(dict(
-                        tick=t, sum=se, sum_var=float(sv),
-                        mean=float(me), mean_var=float(mv), n_sampled=int(nsel),
-                        histogram=hist,
-                    ))
+                    self.results.append(row)
                 else:
-                    out_cap = self.sample_sizes[lvl]
+                    out_cap = self.max_sample_sizes[lvl]
                     if self.mode == "srs":
                         step = _srs_node_step(win.capacity, self.num_strata,
                                               out_cap, lvl)
@@ -805,30 +925,30 @@ class HostTree:
                 # run the (shared) scalar root step — still one dispatch.
                 if self.mode == "srs":
                     step = _srs_root_step(state.capacity, self.num_strata, lvl)
-                    se, sv, me, mv, nsel, hist = step(
+                    outs = step(
                         self._key, t, values[0], strata[0], valid[0],
                         w_in[0], c_in[0],
                         jnp.float32(self.p_level), jnp.float32(self.fraction))
+                elif self.plan is not None:
+                    outs, self._qstate = self._plan_step(
+                        self._key, t, values[0], strata[0], valid[0],
+                        w_in[0], c_in[0], self._qstate,
+                        jnp.float32(self.sample_sizes[lvl]))
                 else:
                     step = _root_step(state.capacity, self.num_strata,
                                       self.allocation, self.sampler_backend,
-                                      lvl, int(self.sample_sizes[lvl]))
-                    se, sv, me, mv, nsel, hist = step(
+                                      lvl, int(self.max_sample_sizes[lvl]))
+                    outs = step(
                         self._key, t, values[0], strata[0], valid[0],
                         w_in[0], c_in[0],
                         jnp.float32(self.sample_sizes[lvl]))
                 self.dispatch_count += 1
-                hist = np.asarray(hist)
-                se = float(se)
+                row = self._root_result(t, outs)  # np.asarray syncs
                 self.level_time_s[lvl] += _time.perf_counter() - t0
-                self.results.append(dict(
-                    tick=t, sum=se, sum_var=float(sv),
-                    mean=float(me), mean_var=float(mv), n_sampled=int(nsel),
-                    histogram=hist,
-                ))
+                self.results.append(row)
             else:
                 n_parents = self.fanin[lvl + 1]
-                out_cap = self.sample_sizes[lvl]
+                out_cap = self.max_sample_sizes[lvl]
                 if self.mode == "srs":
                     step = _srs_level_step(state.n_nodes, state.capacity,
                                            self.num_strata, out_cap,

@@ -132,6 +132,13 @@ class TreeState(NamedTuple):
     ``w_in``/``c_in``      f32 ``[n, X]`` — sticky W^in/C^in sets.
     ``wc_acc``/``c_acc``   f32 ``[n, X]`` — this-interval Σw·C / ΣC.
     ``seen``               bool ``[n, X]`` — strata with fresh metadata.
+
+    ``qstate`` is NOT per-level: it is the continuous query plane's
+    sketch state (``repro.query.compiler.CompiledQueryPlan.init_state``),
+    owned by the root and updated once per root window inside the tick —
+    ``()`` when no queries are registered. It rides in ``TreeState`` so
+    the epoch dispatch donates it with everything else and standing-query
+    state never leaves the device.
     """
 
     values: tuple
@@ -143,6 +150,12 @@ class TreeState(NamedTuple):
     wc_acc: tuple
     c_acc: tuple
     seen: tuple
+    qstate: tuple = ()
+
+    # The per-level buffer fields (everything except the root-owned
+    # ``qstate``) — what the scan tick iterates over level by level.
+    LEVEL_FIELDS = ("values", "strata", "fill", "dropped", "w_in", "c_in",
+                    "wc_acc", "c_acc", "seen")
 
     @staticmethod
     def create(fanin: list[int], capacities: list[int],

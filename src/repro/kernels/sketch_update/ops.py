@@ -1,0 +1,51 @@
+"""Public ops: sketch-update passes with kernel/oracle dispatch.
+
+Same boundary contract as ``kernels/stratified_stats``: on TPU the Pallas
+kernels run compiled; elsewhere ``impl="pallas"`` runs them in interpret
+mode (bit-accurate kernel-body semantics on CPU) and the default resolves
+to the jnp oracle for speed — the query plane evaluates these inside a
+``lax.scan`` epoch, where interpret-mode Pallas would dominate the tick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sketch_update import ref
+from repro.kernels.sketch_update import sketch_update as _pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "width", "impl"))
+def cms_update(
+    keys: jnp.ndarray,
+    weights: jnp.ndarray,
+    depth: int,
+    width: int,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Weighted count-min increments. impl ∈ {auto, pallas, ref}."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _pallas.cms_update(keys, weights, depth, width,
+                                  interpret=not _on_tpu())
+    return ref.cms_update(keys, weights, depth, width)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def quantile_compact(
+    values: jnp.ndarray,
+    cumw_prev: jnp.ndarray,
+    cumw: jnp.ndarray,
+    targets: jnp.ndarray,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Equi-weight rank-target extraction. impl ∈ {auto, pallas, ref}."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _pallas.quantile_compact(values, cumw_prev, cumw, targets,
+                                        interpret=not _on_tpu())
+    return ref.quantile_compact(values, cumw_prev, cumw, targets)

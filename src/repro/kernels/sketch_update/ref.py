@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the sketch-update kernels — the exact math the
+Pallas kernel bodies implement, used for bit-checking and as the fast
+path inside host-traced programs (interpret-mode Pallas inside a long
+``lax.scan`` is CPU-hostile; the oracle lowers to plain XLA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sketch_update.sketch_update import HASH_MULTIPLIERS
+
+
+def hash_buckets(keys: jnp.ndarray, depth: int, width: int) -> jnp.ndarray:
+    """i32[depth, M] multiply-shift buckets — the kernels' hash, verbatim."""
+    shift = jnp.uint32(32 - (width - 1).bit_length())
+    mult = jnp.asarray(HASH_MULTIPLIERS[:depth], jnp.uint32)
+    return jax.lax.shift_right_logical(
+        keys[None, :].astype(jnp.uint32) * mult[:, None], shift
+    ).astype(jnp.int32)
+
+
+def cms_update(keys: jnp.ndarray, weights: jnp.ndarray, depth: int,
+               width: int) -> jnp.ndarray:
+    """f32[depth, width] weighted bucket increments (scatter-add form)."""
+    buckets = hash_buckets(keys, depth, width)
+    rows = jnp.arange(depth, dtype=jnp.int32)[:, None]
+    flat = (rows * width + buckets).reshape(-1)
+    return jnp.zeros((depth * width,), jnp.float32).at[flat].add(
+        jnp.broadcast_to(weights, buckets.shape).reshape(-1)
+    ).reshape(depth, width)
+
+
+def quantile_compact(values: jnp.ndarray, cumw_prev: jnp.ndarray,
+                     cumw: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """f32[C]: interval-membership gather (same hit rule as the kernel).
+
+    A target in [cumw_prev_i, cumw_i) picks slot i; a target at or past
+    the total weight picks nothing and returns 0.
+    """
+    hit = (cumw_prev[:, None] <= targets[None, :]) & \
+          (targets[None, :] < cumw[:, None])
+    return jnp.sum(jnp.where(hit, values[:, None], 0.0), axis=0)

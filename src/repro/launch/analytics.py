@@ -36,10 +36,32 @@ LINK_BW = 1e9 / 8                   # 1 Gbps in bytes/s
 ITEM_BYTES = 16                     # value + stratum tag + framing
 
 
+def _window_rel_error(w: dict, plan=None) -> float:
+    """Measured relative ±2σ error of one root window — the signal the
+    error-budget controller consumes (no ground truth needed online).
+
+    With a registered query plan this is the WORST per-query relative
+    bound across the CLT queries (sum/mean) in the window's answer
+    vector; otherwise the built-in windowed SUM's. Sketch queries carry
+    deterministic structural bounds, so they don't vote."""
+    rels = []
+    if plan is not None and "answers" in w:
+        for _, (off, _, kind) in plan.layout().items():
+            if kind in ("sum", "mean"):
+                est = abs(float(w["answers"][off]))
+                rels.append(float(w["bounds"][off]) / max(est, 1e-9))
+    if not rels:
+        est = abs(w["sum"])
+        rels = [2.0 * float(np.sqrt(max(w["sum_var"], 0.0)))
+                / max(est, 1e-9)]
+    return max(rels)
+
+
 def build_tree(num_strata: int, capacity: int, fraction: float,
                fanin=(4, 2, 1), interval_ticks=None, allocation="fair",
                seed: int = 0, mode: str = "whs", engine: str = "level",
-               sampler_backend: str = "topk") -> HostTree:
+               sampler_backend: str = "topk", queries=None,
+               max_fraction: float | None = None) -> HostTree:
     if mode == "srs":
         # Coin-flip keeps ~p_level of arrivals at each node. A level-l node
         # receives fanin[0]·capacity·p^l / fanin[l] items (fan-in
@@ -50,20 +72,29 @@ def build_tree(num_strata: int, capacity: int, fraction: float,
         total = fanin[0] * capacity
         sizes = [max(int(1.3 * total * (p ** (lvl + 1)) / fanin[lvl]), 8)
                  for lvl in range(len(fanin))]
+        max_sizes = None
     else:
         sizes = [max(int(capacity * fraction), 1)] * len(fanin)
+        # Closed-loop operation provisions buffers for the controller's
+        # budget ceiling so it can grow the sample without retraces.
+        max_sizes = ([max(int(capacity * max_fraction), 1)] * len(fanin)
+                     if max_fraction is not None else None)
     return HostTree(
         fanin=list(fanin), num_strata=num_strata, capacity=capacity,
         sample_sizes=sizes, interval_ticks=interval_ticks,
         allocation=allocation, seed=seed, mode=mode, fraction=fraction,
-        engine=engine, sampler_backend=sampler_backend)
+        engine=engine, sampler_backend=sampler_backend, queries=queries,
+        max_sample_sizes=max_sizes)
 
 
 def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = None,
                  num_sources: int = 8, fanin=(4, 2, 1), interval_ticks=None,
                  allocation: str = "fair", seed: int = 0, mode: str = "whs",
                  engine: str = "level", sampler_backend: str = "topk",
-                 warmup_ticks: int = 0, epoch_ticks: int | None = None):
+                 warmup_ticks: int = 0, epoch_ticks: int | None = None,
+                 queries=None, target_rel_error: float | None = None,
+                 max_fraction: float | None = None,
+                 return_stream: bool = False):
     """Stream → tree → per-window results + ground truth. Returns a dict.
 
     ``capacity=None`` provisions level-0 buffers for the offered load
@@ -83,16 +114,56 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
     requests it) so the measured epochs hit a compiled program, and
     ``ticks`` is rounded up to whole epochs so every dispatch reuses
     the one compiled scan length.
+
+    ``queries`` registers a ``repro.query`` standing-query registry at
+    the root: every window's results then carry ``answers``/``bounds``
+    vectors for all K queries (same dispatch count — the plan evaluates
+    inside the tick). ``target_rel_error`` closes the §IV-B loop: a
+    ``BudgetController`` reads each epoch's (window's) measured relative
+    ±2σ error and moves the per-level sample budgets toward the target,
+    within ``[8, capacity·max_fraction]`` (``max_fraction`` defaults to
+    1.0 when a controller is active). ``return_stream`` additionally
+    returns the raw ingested stream for ground-truth evaluation.
     """
     if capacity is None:
         per_node_rate = sum(s.rate for s in specs) * num_sources / fanin[0]
         iv0 = (interval_ticks or [1])[0]
         capacity = max(int(1.35 * per_node_rate * iv0) + 256 & ~255, 1024)
+    if target_rel_error is not None:
+        assert mode == "whs", "the error-budget loop drives WHS budgets"
+        max_fraction = 1.0 if max_fraction is None else max_fraction
     tree = build_tree(len(specs), capacity, fraction, fanin,
                       interval_ticks, allocation, seed, mode,
-                      engine, sampler_backend)
+                      engine, sampler_backend, queries=queries,
+                      max_fraction=max_fraction)
     sources = [S.StreamSource(specs, seed=seed * 977 + i)
                for i in range(num_sources)]
+    controller = None
+    trajectory: list[dict] = []
+    if target_rel_error is not None:
+        from repro.runtime.budget import BudgetConfig, BudgetController
+
+        controller = BudgetController(
+            BudgetConfig(min_size=8, max_size=int(tree.max_sample_sizes[0]),
+                         target_rel_error=target_rel_error),
+            initial_size=int(tree.sample_sizes[0]))
+    # Only materialize the raw stream when the caller asked for it —
+    # collection is O(items) host memory/time, which would silently void
+    # the scan engine's flat-memory property on long --queries runs.
+    collect = return_stream
+    stream_v: list[np.ndarray] = []
+    stream_s: list[np.ndarray] = []
+
+    def _feedback(new_windows: list[dict], step: int) -> None:
+        """Feed the controller the freshest measured relative ±2σ error
+        and move every level's budget (§IV-B adaptive feedback)."""
+        if controller is None or not new_windows:
+            return
+        rels = [_window_rel_error(w, tree.plan) for w in new_windows]
+        rel = float(np.mean([r for r in rels if np.isfinite(r)] or [0.0]))
+        size = controller.update(rel_error=rel)
+        tree.set_sample_sizes([size] * len(tree.fanin))
+        trajectory.append(dict(step=step, rel_error=rel, size=size))
 
     if engine == "scan":
         epoch_t = min(epoch_ticks or 64, ticks)
@@ -110,7 +181,9 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
                 vals, strs = src.tick()
                 tree.ingest(i % tree.fanin[0], vals, strs)
             tree.tick(t)
-    # reset accounting after warmup
+    # reset accounting after warmup (sketch state included: continuous
+    # answers must cover exactly the measured stream)
+    tree.reset_query_state()
     tree.results.clear()
     tree.items_ingested = 0
     tree.items_forwarded = [0] * len(tree.fanin)
@@ -125,16 +198,29 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
             b = S.batch_ingest(sources, epoch_t, tree.fanin[0], width)
             exact_sum += b.exact_sum
             exact_cnt += b.exact_count
+            if collect:
+                for tt in range(epoch_t):
+                    for node in range(tree.fanin[0]):
+                        c = int(b.counts[tt, node])
+                        stream_v.append(b.values[tt, node, :c])
+                        stream_s.append(b.strata[tt, node, :c])
+            n_before = len(tree.results)
             tree.run_epoch(t0_tick + e * epoch_t, b.values, b.strata,
                            b.counts, offered=b.offered)
+            _feedback(tree.results[n_before:], step=e)
     else:
         for t in range(warmup_ticks + 1, warmup_ticks + ticks + 1):
             for i, src in enumerate(sources):
                 vals, strs = src.tick()
                 exact_sum += float(vals.sum())
                 exact_cnt += len(vals)
+                if collect:
+                    stream_v.append(vals)
+                    stream_s.append(strs)
                 tree.ingest(i % tree.fanin[0], vals, strs)
+            n_before = len(tree.results)
             tree.tick(t)
+            _feedback(tree.results[n_before:], step=t)
     wall = time.time() - t0
 
     approx_sum = float(sum(r["sum"] for r in tree.results))
@@ -162,7 +248,25 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
     # root is the bottleneck and sampling moves it toward the edge.
     bottleneck = max(nt / max(wall, 1e-9) for nt in node_time)  # utilization
     pipeline_tp = (exact_cnt / max(wall, 1e-9)) / max(bottleneck, 1e-9)
+    extras = {}
+    if tree.plan is not None:
+        extras["query_layout"] = {
+            n: dict(offset=o, width=wd, kind=k)
+            for n, (o, wd, k) in tree.plan.layout().items()}
+        extras["windows_answers"] = [r["answers"] for r in tree.results
+                                     if "answers" in r]
+        extras["windows_bounds"] = [r["bounds"] for r in tree.results
+                                    if "bounds" in r]
+    if controller is not None:
+        extras["controller"] = trajectory
+        extras["final_sample_sizes"] = list(tree.sample_sizes)
+    if return_stream:
+        extras["stream_values"] = (np.concatenate(stream_v) if stream_v
+                                   else np.zeros(0, np.float32))
+        extras["stream_strata"] = (np.concatenate(stream_s) if stream_s
+                                   else np.zeros(0, np.int32))
     return {
+        **extras,
         "fraction": fraction,
         "mode": mode,
         "engine": engine,
@@ -211,6 +315,18 @@ def main(argv=None):
                          "reference, topk = dense partial-selection "
                          "thresholds, pallas = fused kernels (interpret "
                          "mode off-TPU)")
+    ap.add_argument("--queries", default=None, metavar="TOKENS",
+                    help="standing queries answered at the root every "
+                         "window, e.g. "
+                         "'sum,count,mean,hist:0:120000:32,q:0.5:0.9:0.99,hh'"
+                         " (see repro.query.registry)")
+    ap.add_argument("--target-rel-error", type=float, default=None,
+                    help="close the §IV-B loop: adapt per-level sample "
+                         "budgets online until the measured relative ±2σ "
+                         "error meets this target")
+    ap.add_argument("--max-fraction", type=float, default=None,
+                    help="budget ceiling for the error-budget controller "
+                         "(fraction of window capacity; default 1.0)")
     args = ap.parse_args(argv)
 
     specs = {
@@ -221,10 +337,17 @@ def main(argv=None):
         "taxi": S.taxi_like(),
         "pollution": S.pollution_like(),
     }[args.dist]
+    registry = None
+    if args.queries:
+        from repro.query.registry import QueryRegistry
+
+        registry = QueryRegistry.from_tokens(args.queries)
     r = run_pipeline(specs, fraction=args.fraction, ticks=args.ticks,
                      allocation=args.allocation, mode=args.mode,
                      engine=args.engine, sampler_backend=args.backend,
-                     warmup_ticks=2, epoch_ticks=args.epoch_ticks)
+                     warmup_ticks=2, epoch_ticks=args.epoch_ticks,
+                     queries=registry, target_rel_error=args.target_rel_error,
+                     max_fraction=args.max_fraction)
     print(f"dist={args.dist} mode={args.mode} engine={args.engine} "
           f"backend={args.backend} fraction={r['fraction']:.0%}")
     print(f"  SUM ≈ {r['approx_sum']:.4e} ± {r['bound_2sigma']:.2e} "
@@ -236,6 +359,21 @@ def main(argv=None):
           f"{r['dispatches']} jitted dispatches)")
     print(f"  latency        {r['latency_s'] * 1e3:.1f} ms/window "
           f"(+{r['latency_window_ticks']:.1f} tick window wait)")
+    if registry is not None and r.get("windows_answers"):
+        last_a, last_b = r["windows_answers"][-1], r["windows_bounds"][-1]
+        print("  standing queries (last window, ± bound):")
+        for name, lay in r["query_layout"].items():
+            o, wd = lay["offset"], lay["width"]
+            a = ", ".join(f"{v:.4g}" for v in last_a[o:o + min(wd, 6)])
+            b = ", ".join(f"{v:.3g}" for v in last_b[o:o + min(wd, 6)])
+            more = " …" if wd > 6 else ""
+            print(f"    {name:<12} [{a}{more}] ± [{b}{more}]")
+    if r.get("controller"):
+        tr = r["controller"]
+        print(f"  error-budget controller: size {tr[0]['size']}→"
+              f"{tr[-1]['size']} over {len(tr)} updates "
+              f"(rel err {tr[0]['rel_error']:.4f}→{tr[-1]['rel_error']:.4f},"
+              f" target {args.target_rel_error})")
     return r
 
 

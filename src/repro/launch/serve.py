@@ -2,9 +2,12 @@
 
 The request stream is the ApproxIoT input: per-request latency/token
 records form sub-streams (stratified by request class), and the serving
-dashboard queries (QPS, mean latency, token totals) are answered from the
-weighted sample with ±2σ bounds instead of logging every request — the
-paper's analytics plane applied to an inference fleet.
+dashboard is the first consumer of the continuous query plane: its
+standing queries (request count → QPS, mean latency, p50/p99 via the
+quantile sketch) are registered once in a ``repro.query`` registry and
+answered together from ONE weighted sample — instead of logging every
+request or issuing ad-hoc per-metric query calls. The paper's analytics
+plane applied to an inference fleet.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
         --requests 64 --decode-len 16
@@ -19,10 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.core import whs, queries
+from repro.core import whs
 from repro.core.types import IntervalBatch, StratumMeta
 from repro.models import model as M
 from repro.optim import train_step
+from repro.query.registry import QueryRegistry
 
 
 def main(argv=None):
@@ -67,7 +71,17 @@ def main(argv=None):
         lat_records += [dt * 1000] * args.batch              # ms per request
         lat_strata += list(rng.integers(0, 4, args.batch))   # request class
 
-    # ---- approximate telemetry over the latency stream -------------------
+    # ---- approximate telemetry through the query registry ----------------
+    # The dashboard's standing queries, registered once; the compiled plan
+    # answers all of them from the same weighted sample in one evaluation.
+    wall = time.time() - t_all
+    dash = (QueryRegistry()
+            .register_count("requests")
+            .register_sum("latency_total_ms")
+            .register_mean("latency_mean_ms")
+            .register_quantile("latency_q_ms", qs=(0.5, 0.99), capacity=256))
+    plan = dash.compile(num_strata=4)
+
     m = len(lat_records)
     batch = IntervalBatch(
         value=jnp.asarray(lat_records, jnp.float32),
@@ -77,15 +91,26 @@ def main(argv=None):
     )
     res = whs.whsamp(jax.random.PRNGKey(1), batch,
                      jnp.float32(args.telemetry_fraction * m), 4)
-    q_sum = queries.weighted_sum(batch, res, 4)
-    q_mean = queries.weighted_mean(batch, res, 4)
+    _, answers, bounds = plan.evaluate(jax.random.PRNGKey(2), batch, res,
+                                       plan.init_state())
+    answers, bounds = np.asarray(answers), np.asarray(bounds)
+    a = lambda name: plan.answer(answers, name)
+    b = lambda name: plan.answer(bounds, name)
+
     exact_mean = float(np.mean(lat_records))
-    print(f"served {m} requests in {time.time()-t_all:.1f}s")
-    print(f"telemetry (from {int(res.selected.sum())}/{m} sampled records):")
-    print(f"  total latency-ms ≈ {float(q_sum.estimate):.1f} ± {float(q_sum.bound(2)):.1f} (2σ)")
-    print(f"  mean latency-ms  ≈ {float(q_mean.estimate):.2f} ± {float(q_mean.bound(2)):.2f} "
-          f"(exact {exact_mean:.2f})")
-    return float(q_mean.estimate), exact_mean
+    qps = float(a("requests")[0]) / max(wall, 1e-9)
+    p50, p99 = a("latency_q_ms")
+    print(f"served {m} requests in {wall:.1f}s")
+    print(f"telemetry (from {int(res.selected.sum())}/{m} sampled records, "
+          f"{plan.k} standing queries, one evaluation):")
+    print(f"  QPS              ≈ {qps:.2f}")
+    print(f"  total latency-ms ≈ {a('latency_total_ms')[0]:.1f} "
+          f"± {b('latency_total_ms')[0]:.1f} (2σ)")
+    print(f"  mean latency-ms  ≈ {a('latency_mean_ms')[0]:.2f} "
+          f"± {b('latency_mean_ms')[0]:.2f} (exact {exact_mean:.2f})")
+    print(f"  p50 / p99 ms     ≈ {p50:.2f} / {p99:.2f} "
+          f"(sketch rank-ε {b('latency_q_ms')[0]:.3f})")
+    return float(a("latency_mean_ms")[0]), exact_mean
 
 
 if __name__ == "__main__":

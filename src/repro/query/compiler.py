@@ -1,0 +1,172 @@
+"""Query-plan compiler: fuse K standing queries into one root evaluation.
+
+``CompiledQueryPlan`` turns a tuple of ``QuerySpec``s into three pure
+functions the tree engines call at the root, *inside* the jitted tick:
+
+* ``init_state()``   — sketch state pytree (one entry per spec; ``()``
+  for stateless CLT queries). Joins ``TreeState`` as donated
+  device-resident leaves under the scan engine.
+* ``evaluate(key, batch, res, state)`` — answers every registered query
+  from ONE window sample: a single shared ``stratum_moments`` pass feeds
+  all CLT queries (sum/count/mean), histograms do one bin-scatter each,
+  and sketch queries fold the window into their state and answer from
+  it. Returns ``(state', answers f32[n_out], bounds f32[n_out])`` — a
+  flat, statically-laid-out answer vector, so the scan engine stacks T
+  windows of answers into one ``[T, n_out]`` epoch output with zero
+  host round-trips.
+* ``exact_answers(values, strata)`` — host-side (NumPy) ground truth in
+  the same layout, for accuracy benchmarks.
+
+The evaluation draws NO randomness from the sampler's key stream — the
+quantile compactor's offset comes from a ``fold_in`` side-branch — so
+registering queries leaves every sample and every reservoir state
+bit-identical to a run with no queries registered (asserted in
+``tests/test_query_plane.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import error as err
+from repro.core.types import IntervalBatch, SampleResult
+from repro.query import sketches
+from repro.query.registry import QuerySpec
+
+# fold_in tag separating the query plane's PRNG stream from the sampler's
+_QUERY_KEY_TAG = 0x51C7
+
+
+class CompiledQueryPlan:
+    """Static, jit-closable fusion of K specs. All array work is pure."""
+
+    def __init__(self, specs: tuple[QuerySpec, ...], num_strata: int):
+        if not specs:
+            raise ValueError("cannot compile an empty query registry")
+        self.specs = tuple(specs)
+        self.num_strata = int(num_strata)
+        off = 0
+        self._layout: dict[str, tuple[int, int, str]] = {}
+        for sp in self.specs:
+            self._layout[sp.name] = (off, sp.out_width, sp.kind)
+            off += sp.out_width
+        self.n_out = off
+
+    @property
+    def k(self) -> int:
+        return len(self.specs)
+
+    def layout(self) -> dict[str, tuple[int, int, str]]:
+        """name → (offset, width, kind) into the flat answer vector."""
+        return dict(self._layout)
+
+    def answer(self, vec: np.ndarray, name: str) -> np.ndarray:
+        """Slice one query's answers out of a flat (host) answer vector."""
+        o, w, _ = self._layout[name]
+        return np.asarray(vec)[..., o:o + w]
+
+    def init_state(self) -> tuple:
+        state = []
+        for sp in self.specs:
+            if sp.kind == "quantile":
+                state.append(sketches.quantile_init(sp.capacity))
+            elif sp.kind == "heavy_hitters":
+                state.append(sketches.hh_init(sp.k, sp.width, sp.depth))
+            else:
+                state.append(())
+        return tuple(state)
+
+    # ------------------------------------------------------------- eval --
+    def evaluate(self, key: jax.Array, batch: IntervalBatch,
+                 res: SampleResult, state: tuple) -> tuple:
+        """(state', answers f32[n_out], bounds f32[n_out]) for one window."""
+        x = self.num_strata
+        sel = res.selected
+        w_item = res.meta.weight[batch.stratum] * sel.astype(jnp.float32)
+        # ONE moments pass shared by every CLT query (the fusion win: the
+        # seed evaluated each query with its own segment-sum sweep).
+        y, s1, s2 = err.stratum_moments(batch.value, batch.stratum, sel, x)
+
+        outs, bnds, new_state = [], [], []
+        for i, sp in enumerate(self.specs):
+            kq = jax.random.fold_in(jax.random.fold_in(key, _QUERY_KEY_TAG), i)
+            st = state[i]
+            if sp.kind == "sum":
+                q = err.approx_sum_from_moments(y, s1, s2, res.meta)
+                a, b, st2 = q.estimate[None], q.bound(2.0)[None], ()
+            elif sp.kind == "count":
+                # HT count is exact per stratum given the metadata
+                # (every item's indicator is 1): variance 0.
+                a = jnp.sum(y * res.meta.weight)[None]
+                b, st2 = jnp.zeros((1,), jnp.float32), ()
+            elif sp.kind == "mean":
+                q = err.approx_mean_from_moments(y, s1, s2, res.meta)
+                a, b, st2 = q.estimate[None], q.bound(2.0)[None], ()
+            elif sp.kind == "histogram":
+                from repro.core import queries as Q
+
+                edges = jnp.linspace(sp.lo, sp.hi, sp.bins + 1)
+                q = Q.weighted_histogram(batch, res, x, edges)
+                a, b, st2 = q.estimate, q.bound(2.0), ()
+            elif sp.kind == "quantile":
+                st2 = sketches.quantile_update(kq, st, batch.value, w_item)
+                a = sketches.quantile_query(st2, jnp.asarray(sp.qs))
+                # live bound: 2·√(compactions so far)/C — honest for
+                # arbitrarily long standing-query streams.
+                b = jnp.full((len(sp.qs),), 1.0) * st2.rank_error_bound
+            elif sp.kind == "heavy_hitters":
+                keys = sketches.hh_item_key(batch.value)
+                st2 = sketches.hh_update(st, keys, w_item)
+                eps_w = sketches.hh_error_bound(sp.width, st2.total_weight)
+                a = jnp.concatenate([st2.key.astype(jnp.float32), st2.est])
+                b = jnp.concatenate([jnp.zeros((sp.k,), jnp.float32),
+                                     jnp.full((sp.k,), 1.0) * eps_w])
+            else:  # pragma: no cover — registry validates kinds
+                raise AssertionError(sp.kind)
+            outs.append(a.astype(jnp.float32))
+            bnds.append(b.astype(jnp.float32))
+            new_state.append(st2)
+        return tuple(new_state), jnp.concatenate(outs), jnp.concatenate(bnds)
+
+    # ------------------------------------------------------ ground truth --
+    def exact_answers(self, values: np.ndarray,
+                      strata: np.ndarray | None = None) -> np.ndarray:
+        """Host-side exact answers over the full stream, layout-aligned.
+
+        Windowed CLT queries aggregate over the whole stream (their
+        per-window estimates are summed/averaged the same way by the
+        caller). Sketch slots need care:
+
+        * ``quantile`` slots hold the exact ``inverted_cdf`` order
+          statistics — the same "first value whose rank exceeds q·W"
+          rule the sketch answers with. Compare in RANK space (measure
+          the sketch value's rank on the stream, as fig8 does): value-
+          space differences are density-sensitive and can be large in
+          flat regions even at zero rank error.
+        * ``heavy_hitters`` slots are NaN: the sketch reports *its own*
+          candidate keys, so a slot-for-slot diff against the true
+          top-k is meaningless — get per-key truth from the raw stream
+          (``np.round(values)`` counts), keyed by the sketch's keys.
+        """
+        values = np.asarray(values, np.float64)
+        out = np.zeros((self.n_out,), np.float64)
+        for sp in self.specs:
+            o, w, _ = self._layout[sp.name]
+            if sp.kind == "sum":
+                out[o] = values.sum()
+            elif sp.kind == "count":
+                out[o] = len(values)
+            elif sp.kind == "mean":
+                out[o] = values.mean() if len(values) else 0.0
+            elif sp.kind == "histogram":
+                edges = np.linspace(sp.lo, sp.hi, sp.bins + 1)
+                ix = np.clip(np.searchsorted(edges, values, side="right") - 1,
+                             0, sp.bins - 1)
+                out[o:o + w] = np.bincount(ix, minlength=sp.bins)
+            elif sp.kind == "quantile":
+                out[o:o + w] = np.quantile(values, np.asarray(sp.qs),
+                                           method="inverted_cdf")
+            elif sp.kind == "heavy_hitters":
+                out[o:o + w] = np.nan
+        return out

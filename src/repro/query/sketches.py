@@ -1,0 +1,224 @@
+"""Mergeable sketch state for standing queries — pure-JAX pytrees.
+
+Both sketches are fixed-shape pytrees, so they ride along ``TreeState``
+as donated device-resident leaves inside the scan engine's epoch
+dispatch and update once per window with no host round-trip. Both are
+*mergeable*: folding a batch in is the same operation as folding another
+sketch's summary in, which is what lets one edge sample answer many
+standing queries (and many tenants share one sketch pipeline).
+
+``QuantileSketch`` — a KLL-style compactor collapsed to one weighted
+buffer of ``C`` summary points. An update merges the current summary
+with the (weighted) batch, sorts by value, and — when over capacity —
+compacts back to ``C`` points at randomized equi-weight rank targets
+``t_k = (k + u)·W/C``, each re-weighted to ``W/C``. The randomized
+offset ``u`` makes every compaction's rank perturbation zero-mean
+(KLL's core trick), so errors across compactions accumulate as a random
+walk, not linearly: rank error ≈ √(#compactions)/C. While the total
+weight still fits in ``C`` points the summary is exact.
+
+``HeavyHitterSketch`` — a weighted count-min sketch (``depth × width``,
+multiply-shift hashing) plus a tracked top-``k`` candidate set. Batch
+update: fold the batch into the counts (one ``cms_update`` kernel pass),
+re-estimate all candidates (old top-k ∪ batch keys) against the fresh
+counts, dedupe, and keep the best ``k``. Estimates only over-count
+(collisions), by at most ``(2/width)·W`` per the standard CM bound.
+
+Heavy inner passes route through ``kernels.sketch_update.ops`` (Pallas
+on TPU, jnp oracle elsewhere).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sketch_update import ops as sk_ops
+from repro.kernels.sketch_update.ref import hash_buckets
+
+HH_EMPTY_KEY = jnp.int32(2**31 - 1)   # sentinel: unoccupied top-k slot
+
+
+# --------------------------------------------------------------- quantile --
+class QuantileSketch(NamedTuple):
+    """``value``/``weight`` f32[C]; weight 0 marks an empty slot. Slots are
+    kept value-sorted (empty slots may interleave; they carry no mass).
+    ``compactions`` f32[] counts lossy compaction steps — it drives the
+    reported rank-error bound (``rank_error_bound``), which a lossless
+    (under-capacity) summary keeps at exactly 0."""
+
+    value: jnp.ndarray
+    weight: jnp.ndarray
+    compactions: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.value.shape[0]
+
+    @property
+    def total_weight(self) -> jnp.ndarray:
+        return jnp.sum(self.weight)
+
+    @property
+    def rank_error_bound(self) -> jnp.ndarray:
+        """Current ±2σ rank-error bound (fraction of total weight).
+
+        One compaction perturbs any rank by at most one weight quantum
+        ``W/C`` with a zero-mean randomized sign; over ``U`` compactions
+        the perturbations random-walk, so ±2σ ≈ ``2·√U/C`` — tracked
+        live, so the bound stays honest for arbitrarily long streams."""
+        return jnp.where(
+            self.compactions > 0.0,
+            2.0 * jnp.sqrt(jnp.maximum(self.compactions, 1.0))
+            / self.capacity,
+            0.0)
+
+
+def quantile_init(capacity: int) -> QuantileSketch:
+    return QuantileSketch(value=jnp.zeros((capacity,), jnp.float32),
+                          weight=jnp.zeros((capacity,), jnp.float32),
+                          compactions=jnp.zeros((), jnp.float32))
+
+
+def quantile_rank_error_bound(capacity: int, max_updates: int = 64) -> float:
+    """Static planning bound: the rank error a ``capacity`` sketch stays
+    within across ``max_updates`` compactions (2·√U/C — see
+    ``QuantileSketch.rank_error_bound`` for the live per-window value).
+    Validated empirically in ``benchmarks/fig8_accuracy.py``."""
+    return 2.0 * math.sqrt(float(max_updates)) / float(capacity)
+
+
+def quantile_update(key: jax.Array, sk: QuantileSketch, values: jnp.ndarray,
+                    weights: jnp.ndarray, *, impl: str = "auto"
+                    ) -> QuantileSketch:
+    """Fold a weighted batch (weight 0 = excluded item) into the summary."""
+    cap = sk.capacity
+    v = jnp.concatenate([sk.value, values])
+    w = jnp.concatenate([sk.weight, jnp.maximum(weights, 0.0)])
+    order = jnp.argsort(v)
+    v_s, w_s = v[order], w[order]
+    cumw = jnp.cumsum(w_s)
+    total = cumw[-1]
+    n_live = jnp.sum(w_s > 0.0)
+
+    def exact():
+        # Everything fits: pack live slots to the front (stable, so the
+        # value ordering survives) — the summary is lossless.
+        pack = jnp.argsort(jnp.where(w_s > 0.0, 0, 1), stable=True)
+        return v_s[pack][:cap], w_s[pack][:cap], sk.compactions
+
+    def compact():
+        u = jax.random.uniform(key, ())
+        t = (jnp.arange(cap, dtype=jnp.float32) + u) * (total / cap)
+        cumw_prev = jnp.concatenate([jnp.zeros((1,), jnp.float32), cumw[:-1]])
+        picked = sk_ops.quantile_compact(v_s, cumw_prev, cumw, t, impl=impl)
+        # f32 rounding can push the last target(s) to >= total; rank-W is
+        # the max live value by definition.
+        vmax = jnp.max(jnp.where(w_s > 0.0, v_s, -jnp.inf))
+        picked = jnp.where(t >= total, vmax, picked)
+        return (picked, jnp.full((cap,), total / cap, jnp.float32),
+                sk.compactions + 1.0)
+
+    value, weight, compactions = jax.lax.cond(n_live <= cap, exact, compact)
+    return QuantileSketch(value=value, weight=weight,
+                          compactions=compactions)
+
+
+def quantile_query(sk: QuantileSketch, qs: jnp.ndarray) -> jnp.ndarray:
+    """f32[len(qs)] value estimates at quantiles ``qs`` (each in [0, 1])."""
+    order = jnp.argsort(sk.value)
+    v_s, w_s = sk.value[order], sk.weight[order]
+    cumw = jnp.cumsum(w_s)
+    total = cumw[-1]
+    t = jnp.clip(qs, 0.0, 1.0) * total
+    # first live slot with cumw > t; q == 1.0 maps to the max live value
+    idx = jnp.searchsorted(cumw, t, side="right")
+    vmax = jnp.max(jnp.where(w_s > 0.0, v_s, -jnp.inf))
+    out = jnp.where(idx < sk.capacity, v_s[jnp.minimum(idx, sk.capacity - 1)],
+                    vmax)
+    return jnp.where(total > 0.0, out, 0.0)
+
+
+# ---------------------------------------------------------- heavy hitters --
+class HeavyHitterSketch(NamedTuple):
+    """``counts`` f32[depth, width] weighted count-min state;
+    ``key`` i32[k] / ``est`` f32[k] the tracked top-k candidates
+    (``HH_EMPTY_KEY`` marks an unoccupied slot)."""
+
+    counts: jnp.ndarray
+    key: jnp.ndarray
+    est: jnp.ndarray
+
+    @property
+    def depth(self) -> int:
+        return self.counts.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.counts.shape[1]
+
+    @property
+    def total_weight(self) -> jnp.ndarray:
+        return jnp.sum(self.counts[0])
+
+
+def hh_init(k: int, width: int, depth: int) -> HeavyHitterSketch:
+    return HeavyHitterSketch(
+        counts=jnp.zeros((depth, width), jnp.float32),
+        key=jnp.full((k,), HH_EMPTY_KEY, jnp.int32),
+        est=jnp.zeros((k,), jnp.float32),
+    )
+
+
+def hh_error_bound(width: int, total_weight: jnp.ndarray) -> jnp.ndarray:
+    """CM over-count bound: est − true ≤ (2/width)·W w.h.p. (1 − 2^-depth)."""
+    return (2.0 / float(width)) * total_weight
+
+
+def hh_point_estimate(sk: HeavyHitterSketch, keys: jnp.ndarray) -> jnp.ndarray:
+    """f32[M] count-min estimates (min over depth rows) for ``keys``."""
+    buckets = hash_buckets(keys, sk.depth, sk.width)           # [D, M]
+    per_row = jnp.take_along_axis(sk.counts, buckets, axis=1)  # [D, M]
+    return jnp.min(per_row, axis=0)
+
+
+def hh_update(sk: HeavyHitterSketch, keys: jnp.ndarray,
+              weights: jnp.ndarray, *, impl: str = "auto"
+              ) -> HeavyHitterSketch:
+    """Fold a weighted key batch in and refresh the top-k candidate set."""
+    k_slots = sk.key.shape[0]
+    w = jnp.maximum(weights, 0.0)
+    delta = sk_ops.cms_update(keys.astype(jnp.uint32), w, sk.depth, sk.width,
+                              impl=impl)
+    counts = sk.counts + delta
+    fresh = sk._replace(counts=counts)
+
+    cand_key = jnp.concatenate(
+        [sk.key, jnp.where(w > 0.0, keys, HH_EMPTY_KEY)])
+    cand_est = jnp.where(cand_key == HH_EMPTY_KEY, -1.0,
+                         hh_point_estimate(fresh, cand_key))
+    # Dedupe: sort by key, keep first occurrence (duplicates share one
+    # CM estimate, so which survives is irrelevant), then top-k by est.
+    order = jnp.argsort(cand_key)
+    ks, es = cand_key[order], cand_est[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    score = jnp.where(first & (ks != HH_EMPTY_KEY), es, -1.0)
+    top_est, top_ix = jax.lax.top_k(score, k_slots)
+    occupied = top_est >= 0.0
+    return HeavyHitterSketch(
+        counts=counts,
+        key=jnp.where(occupied, ks[top_ix], HH_EMPTY_KEY),
+        est=jnp.maximum(top_est, 0.0),
+    )
+
+
+def hh_item_key(values: jnp.ndarray) -> jnp.ndarray:
+    """Default item→key map for value streams: round to the nearest int.
+
+    IoT heavy hitters are "which readings dominate the stream"; rounding
+    buckets the f32 payload into integer keys. Pipelines with a real key
+    column should pass it directly to ``hh_update`` instead.
+    """
+    return jnp.round(values).astype(jnp.int32)

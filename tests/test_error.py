@@ -73,6 +73,56 @@ def test_mean_estimator_and_bound():
     assert float(q.variance) > 0
 
 
+def test_histogram_exact_at_fraction_one():
+    """Fraction 1.0 ⇒ every weight is 1: the histogram estimate equals the
+    exact histogram bin-for-bin and every bin's variance is exactly 0."""
+    rng = np.random.default_rng(12)
+    m, x = 1024, 3
+    strata = rng.integers(0, x, m).astype(np.int32)
+    vals = rng.uniform(0, 10, m).astype(np.float32)
+    batch = IntervalBatch(jnp.asarray(vals), jnp.asarray(strata),
+                          jnp.ones((m,), bool), StratumMeta.identity(x))
+    res = whs.whsamp(jax.random.PRNGKey(2), batch, jnp.float32(m), x)
+    edges = jnp.linspace(0, 10, 9)
+    q = queries.weighted_histogram(batch, res, x, edges)
+    exact, _ = np.histogram(vals, np.asarray(edges))
+    np.testing.assert_array_equal(np.asarray(q.estimate), exact)
+    np.testing.assert_array_equal(np.asarray(q.variance),
+                                  np.zeros(8, np.float32))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_clt_two_sigma_coverage_property(base_seed):
+    """Satellite property: over ≥200 independent sampling draws, the ±2σ
+    interval from approx_sum AND approx_mean covers the true value at a
+    rate consistent with 95% (tolerance band — 2σ two-sided coverage over
+    200 Bernoulli(0.95) trials stays above 0.88 w.p. ≫ 0.999)."""
+    rng = np.random.default_rng(base_seed)
+    m, x = 2048, 3
+    strata = rng.integers(0, x, m).astype(np.int32)
+    vals = rng.normal(100, 30, m).astype(np.float32)
+    batch = IntervalBatch(jnp.asarray(vals), jnp.asarray(strata),
+                          jnp.ones((m,), bool), StratumMeta.identity(x))
+    exact_sum = float(np.asarray(vals, np.float64).sum())
+    exact_mean = exact_sum / m
+    trials = 200
+
+    @jax.jit
+    def trial(key):
+        res = whs.whsamp(key, batch, jnp.float32(256), x)
+        qs = queries.weighted_sum(batch, res, x)
+        qm = queries.weighted_mean(batch, res, x)
+        return qs.estimate, qs.bound(2.0), qm.estimate, qm.bound(2.0)
+
+    keys = jax.random.split(jax.random.PRNGKey(base_seed), trials)
+    se, sb, me, mb = (np.asarray(o) for o in jax.vmap(trial)(keys))
+    hit_sum = int((np.abs(se - exact_sum) <= sb).sum())
+    hit_mean = int((np.abs(me - exact_mean) <= mb).sum())
+    assert 0.88 * trials <= hit_sum <= trials, f"sum coverage {hit_sum}/200"
+    assert 0.88 * trials <= hit_mean <= trials, f"mean coverage {hit_mean}/200"
+
+
 def test_histogram_estimates_counts():
     rng = np.random.default_rng(8)
     m, x = 4096, 2

@@ -8,6 +8,7 @@ import pytest
 from repro.core import sampling
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.sample_mask import ops as sm_ops, ref as sm_ref
+from repro.kernels.sketch_update import ops as sk_ops, ref as sk_ref
 from repro.kernels.stratified_stats import ops as ss_ops, ref as ss_ref
 
 
@@ -50,6 +51,49 @@ def test_sample_mask_matches_ref_and_sampler(m, x):
     sel = sampling.stratified_priority_sample(
         jax.random.PRNGKey(0), strat, valid, res, x, priorities=u)
     assert (np.asarray(k1) == np.asarray(sel)).all()
+
+
+@pytest.mark.parametrize("m,depth,width", [(512, 4, 256), (4096, 2, 1024),
+                                           (5000, 6, 128)])
+def test_cms_update_matches_ref(m, depth, width):
+    rng = np.random.default_rng(m + width)
+    keys = jnp.asarray(rng.integers(-10_000, 10_000, m),
+                       jnp.int32).astype(jnp.uint32)
+    w = jnp.asarray(rng.random(m) * (rng.random(m) > 0.3), jnp.float32)
+    a = sk_ops.cms_update(keys, w, depth, width, impl="pallas")
+    b = sk_ref.cms_update(keys, w, depth, width)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-3)
+    # every depth row conserves the total folded weight
+    np.testing.assert_allclose(np.asarray(a).sum(axis=1),
+                               np.full(depth, float(w.sum())), rtol=1e-5)
+
+
+def test_cms_update_rejects_non_power_of_two_width():
+    with pytest.raises(AssertionError):
+        sk_ops.cms_update(jnp.zeros(8, jnp.uint32), jnp.ones(8, jnp.float32),
+                          2, 100, impl="pallas")
+
+
+@pytest.mark.parametrize("p,c", [(512, 128), (4096, 256), (777, 64)])
+def test_quantile_compact_matches_ref(p, c):
+    rng = np.random.default_rng(p * c)
+    vals = np.sort(rng.normal(0, 10, p)).astype(np.float32)
+    w = (rng.random(p) * (rng.random(p) > 0.2)).astype(np.float32)
+    cumw = np.cumsum(w, dtype=np.float32)
+    prev = np.concatenate([[0], cumw[:-1]]).astype(np.float32)
+    t = ((np.arange(c) + 0.41) * (cumw[-1] / c)).astype(np.float32)
+    a = sk_ops.quantile_compact(jnp.asarray(vals), jnp.asarray(prev),
+                                jnp.asarray(cumw), jnp.asarray(t),
+                                impl="pallas")
+    b = sk_ref.quantile_compact(jnp.asarray(vals), jnp.asarray(prev),
+                                jnp.asarray(cumw), jnp.asarray(t))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # every in-range target is captured by exactly one slot interval
+    in_range = t < cumw[-1]
+    hit_counts = ((prev[:, None] <= t[None, :])
+                  & (t[None, :] < cumw[:, None])).sum(axis=0)
+    assert (hit_counts[in_range] == 1).all()
 
 
 @pytest.mark.parametrize("b,hq,hkv,s,d", [

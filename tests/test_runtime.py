@@ -119,3 +119,39 @@ def test_budget_controller_respects_bounds():
     for _ in range(50):
         size = c.update(latency_s=100.0)
     assert size == 10
+
+
+def test_budget_controller_accuracy_mode_converges_to_target():
+    """Closed-loop accuracy mode on a synthetic stream whose relative
+    error follows the CLT law rel ≈ k/√size: the controller settles
+    within 10% of target_rel_error (and therefore at the implied size),
+    starting from either side of the target."""
+    target = 0.02
+    k_clt = 1.0                      # rel(size) = 1/√size → size* = 2500
+    for start in (50, 40_000):       # under- and over-budgeted starts
+        c = BudgetController(BudgetConfig(min_size=10, max_size=100_000,
+                                          target_rel_error=target), start)
+        size = start
+        for _ in range(40):
+            rel = k_clt / np.sqrt(size)
+            size = c.update(rel_error=rel)
+        final_rel = k_clt / np.sqrt(size)
+        assert abs(final_rel - target) <= 0.1 * target, (start, size,
+                                                         final_rel)
+
+
+def test_budget_controller_accuracy_mode_respects_clamps():
+    """Only the latency path exercised the clamps before: a hopeless
+    error target pins the size at max_size; a trivially loose one at
+    min_size — never beyond either."""
+    cfg = BudgetConfig(min_size=32, max_size=512, target_rel_error=0.001)
+    c = BudgetController(cfg, 64)
+    for _ in range(60):
+        size = c.update(rel_error=0.5)      # never achievable → grow
+        assert 32 <= size <= 512
+    assert size == 512
+    c2 = BudgetController(cfg, 256)
+    for _ in range(60):
+        size = c2.update(rel_error=1e-6)    # absurdly accurate → shrink
+        assert 32 <= size <= 512
+    assert size == 32
