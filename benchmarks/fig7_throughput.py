@@ -21,7 +21,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.data import stream as S
-from repro.launch.analytics import run_pipeline
+from repro.launch.analytics import build_spec, run_pipeline
 
 from benchmarks import common
 
@@ -40,10 +40,13 @@ def run() -> list[dict]:
 
     specs = S.paper_gaussian()
 
-    def sweep(**kw):
+    def sweep(*, fraction, mode, engine):
         """Best-of-N pipeline rate: the emulation runs on a shared host,
-        so a single rep is noise-dominated."""
-        rs = [run_pipeline(specs, ticks=ticks, seed=7, warmup_ticks=2, **kw)
+        so a single rep is noise-dominated. Each point is ONE declarative
+        PipelineSpec; the engine is the execution choice on top of it."""
+        spec = build_spec(specs, fraction=fraction, mode=mode, seed=7)
+        rs = [run_pipeline(specs, ticks=ticks, warmup_ticks=2,
+                           engine=engine, pipeline_spec=spec)
               for _ in range(reps)]
         return max(rs, key=lambda r: r["pipeline_items_s"])
 
@@ -84,9 +87,10 @@ def run() -> list[dict]:
     eng_rows = []
     for engine in ("loop", "level", "scan"):
         for backend in ("argsort", "topk"):
-            rs = [run_pipeline(specs, fraction=0.1, ticks=engine_ticks,
-                               seed=7, mode="whs", engine=engine,
-                               sampler_backend=backend, warmup_ticks=2)
+            spec = build_spec(specs, fraction=0.1, seed=7, mode="whs",
+                              sampler_backend=backend)
+            rs = [run_pipeline(specs, ticks=engine_ticks, engine=engine,
+                               warmup_ticks=2, pipeline_spec=spec)
                   for _ in range(reps)]
             r = min(rs, key=lambda r: r["wall_s"])
             eng_rows.append({

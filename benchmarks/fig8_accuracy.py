@@ -28,7 +28,7 @@ import pathlib
 import numpy as np
 
 from repro.data import stream as S
-from repro.launch.analytics import run_pipeline
+from repro.launch.analytics import build_spec, run_pipeline
 from repro.query.registry import QueryRegistry
 from repro.query.sketches import quantile_rank_error_bound
 
@@ -115,9 +115,11 @@ def run() -> list[dict]:
     for f in fractions:
         errs = []
         for s in seeds:
-            r = run_pipeline(S.paper_gaussian(), fraction=f, ticks=ticks,
-                             seed=s, engine="scan", warmup_ticks=1,
-                             queries=k8_registry(), return_stream=True)
+            spec = build_spec(S.paper_gaussian(), fraction=f, seed=s,
+                              queries=k8_registry())
+            r = run_pipeline(S.paper_gaussian(), ticks=ticks,
+                             engine="scan", warmup_ticks=1,
+                             pipeline_spec=spec, return_stream=True)
             errs.append(_per_query_errors(plan, r))
         row = {"fraction": f}
         for key in errs[0]:
@@ -139,11 +141,14 @@ def run() -> list[dict]:
     ctrl_epochs = 6 if common.QUICK else CTRL_EPOCHS
     # start far below the needed budget: the controller must grow the
     # sample onto the target (§IV-B's "grow when the budget is violated")
-    rc = run_pipeline(S.paper_gaussian(), fraction=0.005,
+    ctrl_spec = build_spec(S.paper_gaussian(), fraction=0.005, seed=11,
+                           queries=k8_registry(),
+                           target_rel_error=TARGET_REL_ERROR,
+                           max_fraction=0.8)
+    rc = run_pipeline(S.paper_gaussian(),
                       ticks=ctrl_epochs * CTRL_EPOCH_TICKS,
-                      epoch_ticks=CTRL_EPOCH_TICKS, seed=11, engine="scan",
-                      warmup_ticks=1, queries=k8_registry(),
-                      target_rel_error=TARGET_REL_ERROR, max_fraction=0.8)
+                      epoch_ticks=CTRL_EPOCH_TICKS, engine="scan",
+                      warmup_ticks=1, pipeline_spec=ctrl_spec)
     traj = rc["controller"]
     tol = 0.1 * TARGET_REL_ERROR
     converged = next((t["step"] + 1 for t in traj

@@ -1,55 +1,50 @@
-"""Quickstart: ApproxIoT's weighted hierarchical sampling in 60 lines.
+"""Quickstart: the declarative pipeline API in ten lines.
 
-Builds one sampling node, streams four Gaussian sub-streams through it,
-and answers ``SUM`` / ``MEAN`` with ±2σ error bounds from a 10% sample —
-the paper's core loop (Alg. 1 + 2, §III-D).
+One frozen ``PipelineSpec`` declares the paper's whole system — the
+8-sources → 4 → 2 → 1 edge topology, the weighted hierarchical sampler
+at a 10% budget, and a tenant of standing queries answered at the root
+every window. ``compile(spec)`` returns a pure pipeline: explicit
+state, one fused device dispatch for the entire epoch.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import whs, queries
-from repro.core.types import IntervalBatch, StratumMeta
+from repro.api import PipelineSpec, SamplerSpec, TopologySpec, compile
+from repro.data import stream as S
+from repro.query.registry import QueryRegistry
 
-NUM_STRATA = 4
-CAPACITY = 8192          # interval buffer slots (static shape — it jits)
-BUDGET = 819             # ≈10% sampling fraction
-
-# --- one interval of data: four sub-streams with very different scales ---
-rng = np.random.default_rng(0)
-mus = [10.0, 1_000.0, 10_000.0, 100_000.0]
-values = np.concatenate([rng.normal(mu, mu * 0.05, CAPACITY // 4) for mu in mus])
-strata = np.repeat(np.arange(4), CAPACITY // 4)
-
-batch = IntervalBatch(
-    value=jnp.asarray(values, jnp.float32),
-    stratum=jnp.asarray(strata, jnp.int32),
-    valid=jnp.ones((CAPACITY,), bool),
-    meta=StratumMeta.identity(NUM_STRATA),   # source node: W=1, C=0
+# -- the whole system, declaratively --------------------------------------
+spec = PipelineSpec(
+    topology=TopologySpec(fanin=(4, 2, 1), capacity=2048, num_strata=4),
+    sampler=SamplerSpec(mode="whs", backend="topk", fraction=0.1),
+    tenants=(QueryRegistry().register_sum().register_mean()
+             .register_quantile("quantiles", (0.5, 0.99))
+             .as_tenant("demo"),),
 )
+pipe = compile(spec)
+state = pipe.init()
 
-# --- WHSamp: stratified reservoir sampling within the budget -------------
-result = whs.whsamp(jax.random.PRNGKey(0), batch, jnp.float32(BUDGET),
-                    NUM_STRATA)
+# -- one epoch of the paper's Gaussian sub-streams, one fused dispatch ----
+sources = [S.StreamSource(S.paper_gaussian(rates=(200,) * 4), seed=i)
+           for i in range(8)]
+batch = S.batch_ingest(sources, ticks=8, n_nodes=4, width=2048)
+state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
+                           batch.strata, batch.counts)
 
-print(f"sampled {int(result.selected.sum())}/{CAPACITY} items "
-      f"(budget {BUDGET})")
-print("per-stratum reservoirs:", np.asarray(result.reservoir, int).tolist())
-print("per-stratum weights:   ",
-      [f"{w:.1f}" for w in np.asarray(result.meta.weight)])
-
-# --- linear queries with rigorous error bounds ----------------------------
-s = queries.weighted_sum(batch, result, NUM_STRATA)
-m = queries.weighted_mean(batch, result, NUM_STRATA)
-exact_sum = float(values.sum())
-exact_mean = float(values.mean())
-
-print(f"\nSUM  ≈ {float(s.estimate):.4e} ± {float(s.bound(2)):.2e} (2σ)"
-      f"   exact {exact_sum:.4e}  "
-      f"(|err| {abs(float(s.estimate) - exact_sum) / exact_sum:.4%})")
-print(f"MEAN ≈ {float(m.estimate):.2f} ± {float(m.bound(2)):.2f} (2σ)"
-      f"      exact {exact_mean:.2f}")
-assert abs(float(s.estimate) - exact_sum) <= float(s.bound(3)), "outside 3σ!"
-print("\nestimates within bounds — done.")
+# -- windowed answers ± rigorous bounds -----------------------------------
+rows = pipe.rows(wa)
+approx = sum(r["sum"] for r in rows)
+bound = 2.0 * float(np.sqrt(sum(r["sum_var"] for r in rows)))
+kept = sum(r["n_sampled"] for r in rows)
+print(f"{len(rows)} windows, {kept}/{batch.exact_count} items at the root "
+      f"(10% budget), 1 fused dispatch")
+print(f"SUM  ≈ {approx:.4e} ± {bound:.2e} (2σ)   exact {batch.exact_sum:.4e}"
+      f"  (|err| {abs(approx - batch.exact_sum) / batch.exact_sum:.4%})")
+last = rows[-1]
+p50, p99 = pipe.answer(last["answers"], "quantiles", tenant="demo")
+print(f"standing queries (tenant 'demo', last window): "
+      f"sum ≈ {pipe.answer(last['answers'], 'sum', tenant='demo')[0]:.4e}, "
+      f"p50 ≈ {p50:.1f}, p99 ≈ {p99:.1f}")
+assert abs(approx - batch.exact_sum) <= 1.5 * bound, "outside 3σ!"
+print("estimates within bounds — done.")

@@ -1,0 +1,28 @@
+"""The declarative pipeline API — the repo's one front door.
+
+    spec  = PipelineSpec(topology=..., sampler=..., tenants=..., budget=...)
+    pipe  = compile(spec)                 # or compile(spec, mesh=...)
+    state = pipe.init(key)
+    state, answers = pipe.run_epoch(state, key, values, strata, counts,
+                                    budgets)
+
+Everything else — the legacy ``HostTree`` engines
+(``HostTree.from_spec``), the SPMD pod-scale path, the analytics/serve
+launchers, benchmarks and examples — consumes the same ``PipelineSpec``,
+resolved by the same code, so every execution substrate is bit-identical
+on identical ingest. See ``repro.api.spec`` and ``repro.api.pipeline``.
+"""
+from repro.api.pipeline import (CompiledPipeline, PipelineState,
+                                WindowAnswers, compile, restore_state,
+                                save_state)
+from repro.api.spec import (BudgetSpec, PipelineSpec, SamplerSpec,
+                            SpecError, TenantSpec, TopologySpec, resolve)
+
+compile_pipeline = compile   # alias for call sites that shadow the builtin
+
+__all__ = [
+    "PipelineSpec", "TopologySpec", "SamplerSpec", "BudgetSpec",
+    "TenantSpec", "SpecError", "resolve", "compile", "compile_pipeline",
+    "CompiledPipeline", "PipelineState", "WindowAnswers",
+    "save_state", "restore_state",
+]

@@ -1,0 +1,359 @@
+"""``compile(spec) → (init, step/run_epoch)`` — the one runtime.
+
+``CompiledPipeline`` is the immutable compilation of a ``PipelineSpec``:
+it closes over every static quantity (topology, capacities, budget
+ceilings, the fused multi-tenant query plan) and exposes pure,
+jax-style entry points:
+
+* ``init(key) -> PipelineState``             — fresh explicit state
+  (the whole tree's window/reservoir/sketch buffers as one pytree plus
+  the global tick counter). No hidden mutation anywhere: checkpointing
+  is ``checkpoint.manager.save(state)``, and vmapping a pipeline over
+  keys/budgets is just ``jax.vmap`` over these functions.
+* ``run_epoch(state, key, values, strata, counts, budgets)
+  -> (state', WindowAnswers)``               — ``T`` ticks fused into
+  ONE jitted ``lax.scan`` dispatch with ``state`` donated; the fused
+  tree-step is ``core.tree._build_scan_tick``, the same traced program
+  the ``HostTree`` scan engine runs, so answers and sample state are
+  bit-identical to every legacy engine (scan ≡ level ≡ loop).
+* ``step(...)``                              — ``run_epoch`` with T=1
+  (one dispatch per tick — the ``level``/``loop`` dispatch granularity
+  on the same runtime).
+
+``budgets`` are traced inputs: the closed-loop controller moves
+per-level sample sizes between epochs with zero retraces. With N
+tenants the root evaluates one fused plan and ``WindowAnswers`` routes
+per-tenant answer slices and per-tenant error attribution back out —
+N registries, one tree dispatch per epoch.
+
+``compile(spec, mesh=...)`` lowers the same spec onto a device mesh
+(see ``repro.api.spmd``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import spec as specmod
+from repro.api.spec import PipelineSpec, SpecError
+from repro.core import tree as T
+from repro.core.window import TreeState
+
+
+class PipelineState(NamedTuple):
+    """Explicit pipeline state: the whole hierarchy's on-device buffers
+    (``core.window.TreeState``, query-sketch state included) plus the
+    next global tick. A plain pytree — donate it into ``run_epoch``,
+    checkpoint it with ``checkpoint.manager``, vmap over it."""
+
+    tree: TreeState
+    tick: Any          # i32 scalar: next global tick to execute
+
+
+class WindowAnswers(NamedTuple):
+    """One epoch's stacked per-window outputs (leading axis = tick).
+
+    ``ok`` masks ticks whose root window actually flushed items; the
+    built-in workload (SUM/MEAN ± variance, sample count, histogram)
+    is always present; ``answers``/``bounds`` are the standing-query
+    plan's flat vectors (``None`` without tenants); ``n_forwarded`` is
+    the per-(tick, level) forwarded-item count (bandwidth accounting).
+    """
+
+    tick: Any
+    ok: Any
+    sum: Any
+    sum_var: Any
+    mean: Any
+    mean_var: Any
+    n_sampled: Any
+    histogram: Any
+    answers: Any
+    bounds: Any
+    n_forwarded: Any
+
+
+class CompiledPipeline:
+    """Immutable compilation of one ``PipelineSpec`` (see module doc)."""
+
+    def __init__(self, spec: PipelineSpec):
+        r = specmod.resolve(spec)
+        self.spec = spec
+        self.fanin = list(spec.topology.fanin)
+        self.num_strata = spec.topology.num_strata
+        self.capacities = list(r.capacities)
+        self.sample_sizes = list(r.sample_sizes)
+        self.max_sample_sizes = list(r.max_sample_sizes)
+        self.interval_ticks = list(r.interval_ticks)
+        self.plan = r.plan
+        self.tenant_names = tuple(t.name for t in spec.tenants)
+        self.trace_counter = {"traces": 0}
+        self._tick_fn = T._build_scan_tick(
+            self.fanin, self.capacities, self.max_sample_sizes,
+            self.interval_ticks, self.num_strata, spec.sampler.allocation,
+            spec.sampler.backend, spec.sampler.mode, r.p_level,
+            spec.sampler.fraction, trace_counter=self.trace_counter,
+            plan=self.plan)
+        self._epoch_fns: dict[int, Any] = {}
+
+    # ------------------------------------------------------------ init --
+    @property
+    def default_key(self) -> jax.Array:
+        """The spec-seeded PRNG key (what ``HostTree`` threads through
+        every tick) — pass it to ``run_epoch`` for spec-deterministic
+        runs, or bring your own key."""
+        return jax.random.PRNGKey(self.spec.seed)
+
+    def init(self, key: jax.Array | None = None) -> PipelineState:
+        """Fresh state: empty buffers, identity metadata, empty sketches,
+        tick counter at 1. ``key`` is accepted for API symmetry (state
+        initialization is deterministic — randomness enters per epoch)."""
+        del key
+        st = TreeState.create(
+            self.fanin, self.capacities, self.num_strata,
+            qstate=self.plan.init_state() if self.plan is not None else ())
+        return PipelineState(tree=st, tick=jnp.int32(1))
+
+    # ------------------------------------------------------------ run --
+    def clamp_budgets(self, budgets) -> list[float]:
+        """Per-level budgets clamped to [1, ceiling] — the provisioned
+        buffers upstream were sized for the ceilings, so exceeding them
+        would truncate forwards (same rule as the legacy
+        ``HostTree.set_sample_sizes``)."""
+        if budgets is None:
+            budgets = self.sample_sizes
+        budgets = list(budgets)
+        if len(budgets) != len(self.fanin):
+            raise SpecError(
+                f"budgets must have one entry per level: got "
+                f"{len(budgets)} for {len(self.fanin)} levels")
+        return [min(max(float(s), 1.0), float(m))
+                for s, m in zip(budgets, self.max_sample_sizes)]
+
+    def _epoch_fn(self, epoch_ticks: int):
+        fn = self._epoch_fns.get(epoch_ticks)
+        if fn is not None:
+            return fn
+        tick_fn = self._tick_fn
+
+        def epoch(state: PipelineState, key, budgets, ing_v, ing_s, ing_n):
+            ts = state.tick + jnp.arange(epoch_ticks, dtype=jnp.int32)
+
+            def body(st, xs):
+                t, v, s, n = xs
+                return tick_fn(st, key, t, budgets, v, s, n)
+
+            tree, outs = jax.lax.scan(body, state.tree,
+                                      (ts, ing_v, ing_s, ing_n))
+            next_state = PipelineState(
+                tree=tree, tick=state.tick + jnp.int32(epoch_ticks))
+            return next_state, (ts,) + outs
+
+        fn = jax.jit(epoch, donate_argnums=(0,))
+        self._epoch_fns[epoch_ticks] = fn
+        return fn
+
+    def run_epoch(self, state: PipelineState, key: jax.Array,
+                  values, strata, counts, budgets=None
+                  ) -> tuple[PipelineState, WindowAnswers]:
+        """Advance ``T = values.shape[0]`` ticks in ONE jitted dispatch.
+
+        ``values``/``strata`` are ``[T, fanin[0], width]`` tick-major
+        padded ingest (``data.stream.batch_ingest`` builds this layout),
+        ``counts`` the per-(tick, node) item counts. ``state`` is
+        donated — do not reuse the argument after the call (checkpoint
+        *before* stepping). ``budgets`` (per-level sample sizes, default
+        = the spec's) are traced: moving them between epochs never
+        recompiles."""
+        values = jnp.asarray(values, jnp.float32)
+        strata = jnp.asarray(strata, jnp.int32)
+        counts = jnp.asarray(counts, jnp.int32)
+        epoch_ticks, n0 = counts.shape
+        if n0 != self.fanin[0]:
+            raise SpecError(f"ingest rows must match level-0 nodes: got "
+                            f"{n0} for fanin {tuple(self.fanin)}")
+        b = jnp.asarray(self.clamp_budgets(budgets), jnp.float32)
+        state, outs = self._epoch_fn(epoch_ticks)(
+            state, key, b, values, strata, counts)
+        if self.plan is not None:
+            ts, ok, se, sv, me, mv, nsel, hist, ans, bnd, n_fwd = outs
+        else:
+            ts, ok, se, sv, me, mv, nsel, hist, n_fwd = outs
+            ans = bnd = None
+        wa = WindowAnswers(tick=ts, ok=ok, sum=se, sum_var=sv, mean=me,
+                           mean_var=mv, n_sampled=nsel, histogram=hist,
+                           answers=ans, bounds=bnd, n_forwarded=n_fwd)
+        return state, wa
+
+    def step(self, state: PipelineState, key: jax.Array,
+             values, strata, counts, budgets=None
+             ) -> tuple[PipelineState, WindowAnswers]:
+        """One tick (``values`` ``[fanin[0], width]``): ``run_epoch``
+        with T=1 — the per-tick dispatch granularity of the legacy
+        ``level``/``loop`` engines on the one fused runtime."""
+        values = np.asarray(values)
+        strata = np.asarray(strata)
+        counts = np.asarray(counts)
+        return self.run_epoch(state, key, values[None], strata[None],
+                              counts[None], budgets)
+
+    def reset_queries(self, state: PipelineState) -> PipelineState:
+        """Empty the standing queries' sketch state (drivers call this
+        after warmup so continuous answers cover only measured ticks)."""
+        if self.plan is None:
+            return state
+        return state._replace(
+            tree=state.tree._replace(qstate=self.plan.init_state()))
+
+    # -------------------------------------------------------- routing --
+    def rows(self, wa: WindowAnswers) -> list[dict]:
+        """Host-side result rows (one dict per flushed root window) in
+        the legacy ``HostTree.results`` layout — the migration shim for
+        drivers that consumed the old list."""
+        host = [np.asarray(x) for x in
+                (wa.tick, wa.ok, wa.sum, wa.sum_var, wa.mean, wa.mean_var,
+                 wa.n_sampled, wa.histogram)]
+        ts, ok, se, sv, me, mv, nsel, hist = host
+        ans = np.asarray(wa.answers) if wa.answers is not None else None
+        bnd = np.asarray(wa.bounds) if wa.bounds is not None else None
+        out = []
+        for i in range(len(ts)):
+            if not ok[i]:
+                continue
+            row = dict(tick=int(ts[i]), sum=float(se[i]),
+                       sum_var=float(sv[i]), mean=float(me[i]),
+                       mean_var=float(mv[i]), n_sampled=int(nsel[i]),
+                       histogram=hist[i])
+            if ans is not None:
+                row["answers"], row["bounds"] = ans[i], bnd[i]
+            out.append(row)
+        return out
+
+    def query_layout(self, tenant: str | None = None) -> dict:
+        """name → (offset, width, kind) into the flat answer vector.
+        With several tenants names are ``"tenant/query"``; pass
+        ``tenant=`` for one tenant's block with local names and
+        absolute offsets."""
+        if self.plan is None:
+            raise SpecError("this pipeline registers no query tenants")
+        if tenant is None:
+            return self.plan.layout()
+        if len(self.tenant_names) == 1:
+            if tenant != self.tenant_names[0]:
+                raise KeyError(f"unknown tenant {tenant!r}; registered: "
+                               f"{list(self.tenant_names)}")
+            return self.plan.layout()
+        base, _ = self.plan.tenant_slice(tenant)
+        return {q: (base + o, w, kind) for q, (o, w, kind)
+                in self.plan.plan_for(tenant).layout().items()}
+
+    def answer(self, vec, name: str, tenant: str | None = None):
+        """Slice one query's answers out of a flat (host) vector; with
+        several tenants pass ``tenant=`` or a ``"tenant/query"`` name."""
+        lay = self.query_layout(tenant)
+        if name not in lay:
+            raise KeyError(f"unknown query {name!r}; available: "
+                           f"{sorted(lay)}")
+        o, w, _ = lay[name]
+        return np.asarray(vec)[..., o:o + w]
+
+    def tenant_answers(self, vec, tenant: str):
+        """One tenant's block of a flat answers/bounds vector — identical
+        bit-for-bit to the vector a single-tenant pipeline of the same
+        registry produces."""
+        if self.plan is None:
+            raise SpecError("this pipeline registers no query tenants")
+        if len(self.tenant_names) == 1:
+            if tenant != self.tenant_names[0]:
+                raise KeyError(f"unknown tenant {tenant!r}; registered: "
+                               f"{list(self.tenant_names)}")
+            return np.asarray(vec)[..., :self.plan.n_out]
+        o, w = self.plan.tenant_slice(tenant)
+        return np.asarray(vec)[..., o:o + w]
+
+    def tenant_rel_errors(self, answers_row, bounds_row) -> dict[str, float]:
+        """Per-tenant measured relative error of one window — the
+        per-tenant attribution signal the shared budget controller
+        consumes; see ``query.compiler.tenant_rel_errors`` (the one
+        implementation) for the exact rule."""
+        from repro.query.compiler import tenant_rel_errors
+
+        if self.plan is None:
+            return {}
+        return tenant_rel_errors(
+            self.plan, answers_row, bounds_row,
+            default_tenant=self.tenant_names[0])
+
+
+# ------------------------------------------------------- checkpointing --
+def save_state(root, step: int, state: PipelineState, *,
+               spec: PipelineSpec | None = None, keep_n: int = 3):
+    """Checkpoint a ``PipelineState`` (atomic, keep-N — see
+    ``checkpoint.manager``). ``spec`` rides in the manifest so a restore
+    can verify it is loading into the same pipeline. Save *before*
+    donating the state into ``run_epoch``."""
+    from repro.checkpoint import manager
+
+    meta = {"pipeline_spec": spec.to_dict()} if spec is not None else {}
+    return manager.save(root, step, state, meta=meta, keep_n=keep_n)
+
+
+def restore_state(root, compiled: CompiledPipeline, step: int | None = None
+                  ) -> tuple[PipelineState, dict]:
+    """Load a checkpointed ``PipelineState`` into ``compiled``'s state
+    template (default: the latest step under ``root``). Restoring into a
+    pipeline whose spec differs from the one recorded at save time is a
+    ``SpecError`` — resuming a stream under different sampling semantics
+    silently changes every answer."""
+    from repro.checkpoint import manager
+
+    if step is None:
+        step = manager.latest_step(root)
+        if step is None:
+            raise SpecError(f"no pipeline checkpoints under {root!r}")
+    state, meta = manager.restore(root, step, compiled.init())
+    saved = meta.get("pipeline_spec")
+    if saved is not None and saved != compiled.spec.to_dict():
+        raise SpecError(
+            f"checkpoint at {root!r} step {step} was written by a "
+            f"different PipelineSpec — recompile with "
+            f"PipelineSpec.from_dict(manifest['pipeline_spec']) or point "
+            f"at the right checkpoint directory")
+    return state, meta
+
+
+# Bounded: each entry pins a pipeline AND its jitted epoch executables,
+# so an unbounded cache would grow without limit under spec sweeps
+# (fig8 alone compiles ~19 distinct (fraction, seed) specs). 16 covers
+# every concurrent-pipeline pattern in the repo; evicted pipelines just
+# recompile on next use.
+@functools.lru_cache(maxsize=16)
+def _cached_compile(spec: PipelineSpec) -> CompiledPipeline:
+    return CompiledPipeline(spec)
+
+
+def compile(spec: PipelineSpec, *, mesh=None, axis_name: str = "data"):
+    """The front door: ``PipelineSpec → CompiledPipeline``.
+
+    With ``mesh=`` the same spec lowers onto the pod-scale SPMD
+    two-level hierarchy instead (``repro.api.spmd.CompiledSpmdPipeline``
+    — every device samples locally, reservoirs all-gather, the root
+    re-samples; same sampler/backend/budget fields of the spec).
+
+    Specs are frozen/hashable, so local compilations are cached: calling
+    ``compile`` twice on an identical spec returns the same (stateless)
+    pipeline object and reuses its jit caches."""
+    if not isinstance(spec, PipelineSpec):
+        raise SpecError(f"compile() takes a PipelineSpec, got "
+                        f"{type(spec).__name__} — build one with "
+                        f"repro.api.PipelineSpec(...) or "
+                        f"PipelineSpec.from_dict(...)")
+    if mesh is not None:
+        from repro.api.spmd import CompiledSpmdPipeline
+
+        return CompiledSpmdPipeline(spec, mesh, axis_name=axis_name)
+    return _cached_compile(spec)

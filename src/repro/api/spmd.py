@@ -1,0 +1,108 @@
+"""``compile(spec, mesh=...)`` — the same spec on the pod-scale data plane.
+
+The SPMD lowering of a ``PipelineSpec`` is the paper's §III-E two-level
+hierarchy run in-graph across a mesh axis: every device WHS-samples its
+local interval batch with the spec's backend/allocation, compacts to the
+spec's level-0 budget, all-gathers the *reservoirs only*, and the root
+stage re-samples to the spec's root budget and answers SUM/MEAN with
+error bounds — ``core.tree.spmd_local_then_root_epoch`` under
+``shard_map``, one dispatch per epoch of ``T`` interval batches.
+
+The pipeline is stateless between intervals (the SPMD path carries no
+sticky windows — each interval batch is complete), so ``init`` returns
+an empty state and ``run_epoch`` is a pure function of (key, batches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import spec as specmod
+from repro.api.spec import PipelineSpec, SpecError
+from repro.core import tree as T
+from repro.core.types import IntervalBatch
+from repro.launch.sharding import spmd_epoch_specs
+
+
+def _shard_map():
+    try:
+        return jax.shard_map                       # jax >= 0.6
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+
+        return shard_map
+
+
+def _rep_check_kwargs(fn, enabled: bool) -> dict:
+    """The replication-check kwarg was renamed ``check_rep`` →
+    ``check_vma`` across jax versions; pass whichever this build has."""
+    import inspect
+
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):                # pragma: no cover
+        params = {}
+    name = "check_vma" if "check_vma" in params else "check_rep"
+    return {name: enabled}
+
+
+class CompiledSpmdPipeline:
+    """Immutable SPMD compilation of one ``PipelineSpec``.
+
+    ``run_epoch(state, key, batches)`` takes an ``IntervalBatch`` whose
+    leaves carry a leading tick axis (``value[T, M]`` sharded over the
+    mesh axis on M) and returns ``(state, (sum, mean))`` — per-tick
+    ``QueryResult``s with rigorous variance, replicated across the axis
+    (every device computes the root redundantly; no single point of
+    failure)."""
+
+    def __init__(self, spec: PipelineSpec, mesh, *, axis_name: str = "data"):
+        if spec.sampler.mode != "whs":
+            raise SpecError("the SPMD path runs the weighted hierarchical "
+                            "sampler: use sampler.mode='whs' (the SRS "
+                            "baseline exists only in the emulated tree)")
+        if spec.tenants:
+            raise SpecError("query tenants are not lowered to the SPMD "
+                            "path yet — drop spec.tenants for mesh "
+                            "compilation (the root answers SUM/MEAN with "
+                            "bounds); see ROADMAP 'Sketch answers inside "
+                            "spmd_local_then_root'")
+        if axis_name not in mesh.axis_names:
+            raise SpecError(f"mesh has no axis {axis_name!r} "
+                            f"(axes: {mesh.axis_names})")
+        r = specmod.resolve(spec)
+        self.spec = spec
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.local_budget = int(r.sample_sizes[0])
+        self.root_budget = int(r.sample_sizes[-1])
+        in_specs, out_specs = spmd_epoch_specs(axis_name)
+        kw = dict(axis_name=axis_name,
+                  num_strata=spec.topology.num_strata,
+                  local_budget=self.local_budget,
+                  root_budget=self.root_budget,
+                  allocation=spec.sampler.allocation,
+                  sampler_backend=spec.sampler.backend)
+        sm = _shard_map()
+        # pallas_call has no replication rule under shard_map's rep/vma
+        # check — the kernel backend opts out (results are still
+        # replicated by construction, see spmd_local_then_root).
+        fn = sm(lambda k, b: T.spmd_local_then_root_epoch(k, b, **kw),
+                mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                **_rep_check_kwargs(sm, spec.sampler.backend != "pallas"))
+        self._fn = jax.jit(fn)
+
+    @property
+    def default_key(self) -> jax.Array:
+        return jax.random.PRNGKey(self.spec.seed)
+
+    def init(self, key: jax.Array | None = None) -> tuple:
+        """The SPMD path carries no cross-interval state: empty pytree."""
+        del key
+        return ()
+
+    def run_epoch(self, state: tuple, key: jax.Array,
+                  batches: IntervalBatch):
+        """``T`` interval batches in one dispatch; tick ``i`` folds ``i``
+        into ``key``, bit-matching ``T`` per-interval calls."""
+        return state, self._fn(key, batches)

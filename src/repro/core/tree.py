@@ -77,6 +77,26 @@ def _level_keys(key, t, lvl: int, n_nodes: int):
     )(jnp.arange(n_nodes, dtype=jnp.uint32))
 
 
+def derive_capacities(fanin, capacity: int, max_sample_sizes,
+                      interval_ticks) -> list[int]:
+    """Per-level buffer capacities from the level-0 capacity and the
+    per-level budget ceilings. Level ``l+1``'s buffer holds every child's
+    budget times the exact arrival bound (ceil children-per-parent ×
+    flushes-per-interval) — a parent buffer can never truncate. Shared by
+    ``HostTree`` and the ``repro.api`` compiler, which is what keeps the
+    two front doors bit-identical."""
+    capacities: list[int] = []
+    cap = int(capacity)
+    for lvl, n_nodes in enumerate(fanin):
+        capacities.append(cap)
+        if lvl + 1 < len(fanin):
+            children_per_parent = -(-n_nodes // fanin[lvl + 1])  # ceil
+            flushes = -(-interval_ticks[lvl + 1] // interval_ticks[lvl])
+            cap = max(int(max_sample_sizes[lvl]) * children_per_parent
+                      * flushes, 64)
+    return capacities
+
+
 def _child_routing(n_nodes: int, n_parents: int) -> np.ndarray:
     """Static routing table: ``child_of[p, j]`` = index of parent ``p``'s
     ``j``-th child (ascending), padded with the sentinel ``n_nodes``.
@@ -599,6 +619,30 @@ def _build_epoch_fn(tick_fn, epoch_ticks: int):
     return jax.jit(epoch, donate_argnums=(0,))
 
 
+def accumulate_epoch_accounting(tree, wall: float, counts, offered,
+                                n_fwd) -> None:
+    """Per-epoch accounting shared by ``HostTree.run_epoch`` and the
+    compiled-pipeline driver (``launch.analytics._CompiledDriver``) —
+    one implementation so the engines are compared under identical
+    bookkeeping. A fused epoch cannot observe per-level time inside its
+    single dispatch, so wall-time is attributed to levels proportionally
+    to their buffer slots (``n_nodes × capacity`` — a static model of
+    where the work is); ``offered`` is the pre-truncation ingest count
+    (defaults to ``counts``); ``n_fwd`` is the stacked per-(tick, level)
+    forwarded-item count."""
+    import numpy as np
+
+    tree.dispatch_count += 1
+    slots = [n * c for n, c in zip(tree.fanin, tree.capacities)]
+    total = float(sum(slots))
+    for lvl, s in enumerate(slots):
+        tree.level_time_s[lvl] += wall * s / total
+    tree.items_ingested += int(
+        np.asarray(counts if offered is None else offered).sum())
+    for lvl in range(len(tree.fanin) - 1):
+        tree.items_forwarded[lvl] += int(n_fwd[:, lvl].sum())
+
+
 class HostTree:
     """Emulated edge topology (default geometry = the paper's testbed:
     8 sources → 4 edge nodes → 2 edge nodes → 1 root).
@@ -682,23 +726,12 @@ class HostTree:
         self.p_level = (float(fraction) ** (1.0 / len(fanin))
                         if fraction is not None else 1.0)
         interval_ticks = interval_ticks or [1] * len(fanin)
-        self.capacities: list[int] = []
-        cap = capacity
-        for lvl, n_nodes in enumerate(fanin):
-            self.capacities.append(cap)
-            if lvl + 1 < len(fanin):
-                # Next level's buffer: every child forwards ≤ its budget per
-                # flush, and with globally-ticked intervals a parent
-                # accumulates at most ceil(P/C) child flushes per interval —
-                # an exact arrival bound, so the buffer can never truncate.
-                # (The seed's 2x slack came from the paper's fully-async
-                # §III-C intervals; this emulation's intervals share the
-                # global tick, so the bound is tight and buys upper-level
-                # buffers — and their sort/top-k passes — half the slots.)
-                children_per_parent = -(-n_nodes // fanin[lvl + 1])  # ceil
-                flushes = -(-interval_ticks[lvl + 1] // interval_ticks[lvl])
-                cap = max(self.max_sample_sizes[lvl] * children_per_parent
-                          * flushes, 64)
+        # Exact arrival-bound buffer provisioning (see derive_capacities:
+        # with globally-ticked intervals the bound is tight, so upper-level
+        # buffers — and their sort/top-k passes — carry no 2x slack).
+        self.capacities = derive_capacities(fanin, capacity,
+                                            self.max_sample_sizes,
+                                            interval_ticks)
         if engine == "loop":
             self.levels = [
                 [Window(self.capacities[lvl], num_strata, interval_ticks[lvl])
@@ -713,10 +746,10 @@ class HostTree:
             ]
         else:  # scan: whole-tree on-device state, one dispatch per epoch
             self.levels = None
-            self._state = TreeState.create(fanin, self.capacities, num_strata)
-            if self.plan is not None:
-                self._state = self._state._replace(
-                    qstate=self.plan.init_state())
+            self._state = TreeState.create(
+                fanin, self.capacities, num_strata,
+                qstate=self.plan.init_state() if self.plan is not None
+                else ())
             self._trace_counter = {"traces": 0}
             self._tick_fn = _build_scan_tick(
                 fanin, self.capacities, self.max_sample_sizes, interval_ticks,
@@ -736,6 +769,35 @@ class HostTree:
         self.level_time_s = [0.0] * len(fanin)    # processing time (Fig. 9/10)
         self.dispatch_count = 0                   # jitted step invocations
         self.results: list[dict] = []
+
+    @classmethod
+    def from_spec(cls, spec, engine: str = "level") -> "HostTree":
+        """Back-compat shim: build a ``HostTree`` from a declarative
+        ``repro.api.PipelineSpec`` — the one front door. New code should
+        use ``repro.api.compile(spec)`` (pure ``init``/``run_epoch``,
+        explicit donated state); this constructor exists so the per-tick
+        ``level``/``loop`` engines and legacy drivers consume the same
+        job description. Resolution (sample sizes, ceilings, intervals,
+        query plan) is shared with the API compiler, so the two paths
+        are bit-identical."""
+        from repro.api.spec import resolve
+
+        r = resolve(spec)
+        return cls(
+            fanin=list(spec.topology.fanin),
+            num_strata=spec.topology.num_strata,
+            capacity=spec.topology.capacity,
+            sample_sizes=list(r.sample_sizes),
+            interval_ticks=list(r.interval_ticks),
+            allocation=spec.sampler.allocation,
+            seed=spec.seed,
+            mode=spec.sampler.mode,
+            fraction=spec.sampler.fraction,
+            engine=engine,
+            sampler_backend=spec.sampler.backend,
+            queries=r.plan,
+            max_sample_sizes=list(r.max_sample_sizes),
+        )
 
     def ingest(self, node: int, values: np.ndarray, strata: np.ndarray) -> None:
         """Source → level-0 node delivery."""
@@ -798,16 +860,7 @@ class HostTree:
                 np.asarray(o) for o in outs)
             ans = bnd = None
         wall = _time.perf_counter() - t_start
-        self.dispatch_count += 1
-        # Slot-proportional level-time attribution (class docstring).
-        slots = [n * c for n, c in zip(self.fanin, self.capacities)]
-        total = float(sum(slots))
-        for lvl, s in enumerate(slots):
-            self.level_time_s[lvl] += wall * s / total
-        self.items_ingested += int(
-            (counts if offered is None else offered).sum())
-        for lvl in range(len(self.fanin) - 1):
-            self.items_forwarded[lvl] += int(n_fwd[:, lvl].sum())
+        accumulate_epoch_accounting(self, wall, counts, offered, n_fwd)
         for i in range(epoch_ticks):
             if root_ok[i]:
                 row = dict(

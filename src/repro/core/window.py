@@ -159,8 +159,10 @@ class TreeState(NamedTuple):
 
     @staticmethod
     def create(fanin: list[int], capacities: list[int],
-               num_strata: int) -> "TreeState":
-        """Fresh (empty-buffer, identity-metadata) whole-tree state."""
+               num_strata: int, qstate: tuple = ()) -> "TreeState":
+        """Fresh (empty-buffer, identity-metadata) whole-tree state;
+        ``qstate`` seeds the root's query-sketch state (pass the
+        compiled plan's ``init_state()`` when queries are registered)."""
         import jax.numpy as jnp
 
         x = num_strata
@@ -173,7 +175,7 @@ class TreeState(NamedTuple):
             fill=zn(jnp.int32), dropped=zn(jnp.int32),
             w_in=tuple(jnp.ones((n, x), jnp.float32) for n in fanin),
             c_in=zx(jnp.float32), wc_acc=zx(jnp.float32),
-            c_acc=zx(jnp.float32), seen=zx(bool),
+            c_acc=zx(jnp.float32), seen=zx(bool), qstate=qstate,
         )
 
 

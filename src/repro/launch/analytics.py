@@ -27,6 +27,9 @@ import time
 
 import numpy as np
 
+from repro import api
+from repro.api.spec import (BudgetSpec, PipelineSpec, SamplerSpec,
+                            TenantSpec, TopologySpec)
 from repro.core.tree import HostTree
 from repro.data import stream as S
 
@@ -34,6 +37,61 @@ from repro.data import stream as S
 HOP_RTT_S = (0.020, 0.040, 0.080)   # source→L0, L0→L1, L1→root
 LINK_BW = 1e9 / 8                   # 1 Gbps in bytes/s
 ITEM_BYTES = 16                     # value + stratum tag + framing
+
+
+def default_capacity(specs, num_sources: int = 8, fanin=(4, 2, 1),
+                     interval_ticks=None) -> int:
+    """Level-0 buffer provisioning for the offered load (Σ rates ×
+    sources per node × interval, 35% Poisson slack) — level-0 drops
+    carry no metadata, so an under-provisioned ingest buffer silently
+    biases the estimate downward."""
+    per_node_rate = sum(s.rate for s in specs) * num_sources / fanin[0]
+    iv0 = (interval_ticks or [1])[0]
+    return max(int(1.35 * per_node_rate * iv0) + 256 & ~255, 1024)
+
+
+def build_spec(specs=None, *, fraction: float, capacity: int | None = None,
+               num_strata: int | None = None,
+               num_sources: int = 8, fanin=(4, 2, 1), interval_ticks=None,
+               allocation: str = "fair", seed: int = 0, mode: str = "whs",
+               sampler_backend: str = "topk", queries=None,
+               target_rel_error: float | None = None,
+               max_fraction: float | None = None) -> PipelineSpec:
+    """The §V testbed job as ONE declarative ``PipelineSpec`` — what
+    every driver (this CLI, benchmarks, examples) constructs and hands
+    to ``repro.api.compile`` / ``HostTree.from_spec``.
+
+    ``specs`` (the sub-stream mix) sizes the level-0 buffers for the
+    offered load and sets ``num_strata``; pass explicit ``capacity``/
+    ``num_strata`` to build a spec without a stream description.
+
+    ``queries`` registers the standing-query plane: a ``QueryRegistry``
+    becomes the single ``"default"`` tenant; a sequence of
+    ``TenantSpec``s compiles N tenants into one shared batched root
+    evaluation with per-tenant answer routing."""
+    if capacity is None:
+        capacity = default_capacity(specs, num_sources, fanin,
+                                    interval_ticks)
+    if num_strata is None:
+        num_strata = len(specs)
+    if queries is None:
+        tenants = ()
+    elif isinstance(queries, (list, tuple)):
+        tenants = tuple(queries)
+    else:
+        tenants = (TenantSpec.from_registry("default", queries),)
+    return PipelineSpec(
+        topology=TopologySpec(fanin=tuple(fanin), capacity=capacity,
+                              interval_ticks=(tuple(interval_ticks)
+                                              if interval_ticks else None),
+                              num_strata=num_strata),
+        sampler=SamplerSpec(mode=mode, backend=sampler_backend,
+                            allocation=allocation, fraction=fraction),
+        tenants=tenants,
+        budget=BudgetSpec(max_fraction=max_fraction,
+                          target_rel_error=target_rel_error),
+        seed=seed,
+    )
 
 
 def _window_rel_error(w: dict, plan=None) -> float:
@@ -57,43 +115,92 @@ def _window_rel_error(w: dict, plan=None) -> float:
     return max(rels)
 
 
+def _tenant_rel_errors(w: dict, plan) -> dict[str, float]:
+    """Per-tenant attribution of one result row's measured error — the
+    shared ``query.compiler.tenant_rel_errors`` rule over the row's
+    answers/bounds vectors."""
+    from repro.query.compiler import tenant_rel_errors
+
+    if "answers" not in w:
+        return {}
+    return tenant_rel_errors(plan, w["answers"], w["bounds"])
+
+
 def build_tree(num_strata: int, capacity: int, fraction: float,
                fanin=(4, 2, 1), interval_ticks=None, allocation="fair",
                seed: int = 0, mode: str = "whs", engine: str = "level",
                sampler_backend: str = "topk", queries=None,
                max_fraction: float | None = None) -> HostTree:
-    if mode == "srs":
-        # Coin-flip keeps ~p_level of arrivals at each node. A level-l node
-        # receives fanin[0]·capacity·p^l / fanin[l] items (fan-in
-        # concentrates the stream), so its outbound buffer must hold
-        # p^(l+1)·that, with slack — truncating would break Horvitz–
-        # Thompson unbiasedness.
-        p = fraction ** (1.0 / len(fanin))
-        total = fanin[0] * capacity
-        sizes = [max(int(1.3 * total * (p ** (lvl + 1)) / fanin[lvl]), 8)
-                 for lvl in range(len(fanin))]
-        max_sizes = None
-    else:
-        sizes = [max(int(capacity * fraction), 1)] * len(fanin)
-        # Closed-loop operation provisions buffers for the controller's
-        # budget ceiling so it can grow the sample without retraces.
-        max_sizes = ([max(int(capacity * max_fraction), 1)] * len(fanin)
-                     if max_fraction is not None else None)
-    return HostTree(
-        fanin=list(fanin), num_strata=num_strata, capacity=capacity,
-        sample_sizes=sizes, interval_ticks=interval_ticks,
-        allocation=allocation, seed=seed, mode=mode, fraction=fraction,
-        engine=engine, sampler_backend=sampler_backend, queries=queries,
-        max_sample_sizes=max_sizes)
+    """Back-compat wrapper: the keyword soup becomes one declarative
+    ``PipelineSpec`` (see ``build_spec``) consumed through the
+    ``HostTree.from_spec`` shim. Budget sizing (WHS fraction×capacity,
+    the SRS HT-safe provisioning, controller ceilings) now lives in
+    ``repro.api.spec.derive_sample_sizes`` — one source of truth."""
+    spec = build_spec(fraction=fraction, capacity=capacity,
+                      num_strata=num_strata, fanin=fanin,
+                      interval_ticks=interval_ticks, allocation=allocation,
+                      seed=seed, mode=mode, sampler_backend=sampler_backend,
+                      queries=queries, max_fraction=max_fraction)
+    return HostTree.from_spec(spec, engine=engine)
 
 
-def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = None,
+class _CompiledDriver:
+    """``run_pipeline``'s scan-engine executor: drives a pure
+    ``repro.api.CompiledPipeline`` (explicit donated state, budgets as
+    traced inputs) while keeping ``HostTree``'s accounting surface
+    (``results``/``items_*``/``level_time_s``/``dispatch_count``), so
+    one driver body serves the per-tick shim engines and the compiled
+    runtime alike. The scan engine cannot observe per-level time inside
+    its fused dispatch, so epoch wall-time is attributed to levels
+    proportionally to their buffer slots — same model as the old
+    ``HostTree.run_epoch``."""
+
+    def __init__(self, pipe: "api.CompiledPipeline"):
+        self.pipe = pipe
+        self.state = pipe.init()
+        self.plan = pipe.plan
+        self.fanin = list(pipe.fanin)
+        self.capacities = list(pipe.capacities)
+        self.sample_sizes = list(pipe.sample_sizes)
+        self.max_sample_sizes = list(pipe.max_sample_sizes)
+        self._key = pipe.default_key
+        self.results: list[dict] = []
+        self.items_ingested = 0
+        self.items_forwarded = [0] * len(self.fanin)
+        self.level_time_s = [0.0] * len(self.fanin)
+        self.dispatch_count = 0
+
+    def run_epoch(self, t0: int, values, strata, counts, offered=None):
+        import time as _time
+
+        from repro.core.tree import accumulate_epoch_accounting
+
+        t_start = _time.perf_counter()
+        self.state, wa = self.pipe.run_epoch(
+            self.state, self._key, values, strata, counts,
+            budgets=self.sample_sizes)
+        rows = self.pipe.rows(wa)                 # device→host sync
+        n_fwd = np.asarray(wa.n_forwarded)
+        wall = _time.perf_counter() - t_start
+        accumulate_epoch_accounting(self, wall, counts, offered, n_fwd)
+        self.results.extend(rows)
+
+    def reset_query_state(self) -> None:
+        self.state = self.pipe.reset_queries(self.state)
+
+    def set_sample_sizes(self, sizes) -> None:
+        self.sample_sizes = self.pipe.clamp_budgets(sizes)
+
+
+def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
+                 capacity: int | None = None,
                  num_sources: int = 8, fanin=(4, 2, 1), interval_ticks=None,
                  allocation: str = "fair", seed: int = 0, mode: str = "whs",
                  engine: str = "level", sampler_backend: str = "topk",
                  warmup_ticks: int = 0, epoch_ticks: int | None = None,
                  queries=None, target_rel_error: float | None = None,
                  max_fraction: float | None = None,
+                 pipeline_spec: PipelineSpec | None = None,
                  return_stream: bool = False):
     """Stream → tree → per-window results + ground truth. Returns a dict.
 
@@ -124,29 +231,61 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
     within ``[8, capacity·max_fraction]`` (``max_fraction`` defaults to
     1.0 when a controller is active). ``return_stream`` additionally
     returns the raw ingested stream for ground-truth evaluation.
+
+    ``pipeline_spec`` supplies the whole job as one declarative
+    ``repro.api.PipelineSpec`` (what this function builds internally via
+    ``build_spec`` otherwise); the keyword knobs it covers (fraction,
+    mode, fanin, intervals, queries, budget policy, seed) are then read
+    from the spec. ``engine="scan"`` executes through the compiled
+    ``repro.api`` runtime (pure ``init``/``run_epoch`` with donated
+    state); ``"level"``/``"loop"`` drive the per-tick ``HostTree`` shim
+    on the same spec — bit-identical on identical ingest.
     """
-    if capacity is None:
-        per_node_rate = sum(s.rate for s in specs) * num_sources / fanin[0]
-        iv0 = (interval_ticks or [1])[0]
-        capacity = max(int(1.35 * per_node_rate * iv0) + 256 & ~255, 1024)
-    if target_rel_error is not None:
-        assert mode == "whs", "the error-budget loop drives WHS budgets"
-        max_fraction = 1.0 if max_fraction is None else max_fraction
-    tree = build_tree(len(specs), capacity, fraction, fanin,
-                      interval_ticks, allocation, seed, mode,
-                      engine, sampler_backend, queries=queries,
-                      max_fraction=max_fraction)
-    sources = [S.StreamSource(specs, seed=seed * 977 + i)
+    if pipeline_spec is None:
+        if target_rel_error is not None:
+            assert mode == "whs", "the error-budget loop drives WHS budgets"
+            max_fraction = 1.0 if max_fraction is None else max_fraction
+        pipeline_spec = build_spec(
+            specs, fraction=fraction, capacity=capacity,
+            num_sources=num_sources, fanin=fanin,
+            interval_ticks=interval_ticks, allocation=allocation, seed=seed,
+            mode=mode, sampler_backend=sampler_backend, queries=queries,
+            target_rel_error=target_rel_error, max_fraction=max_fraction)
+    # The spec is the job description: derive every reported/derived
+    # quantity from it so an explicitly-passed spec and the legacy
+    # keyword path behave identically.
+    mode = pipeline_spec.sampler.mode
+    fraction = pipeline_spec.sampler.fraction
+    sampler_backend = pipeline_spec.sampler.backend
+    fanin = tuple(pipeline_spec.topology.fanin)
+    interval_ticks = (list(pipeline_spec.topology.interval_ticks)
+                      if pipeline_spec.topology.interval_ticks else None)
+    target_rel_error = pipeline_spec.budget.target_rel_error
+    if engine == "scan":
+        tree = _CompiledDriver(api.compile(pipeline_spec))
+    else:
+        tree = HostTree.from_spec(pipeline_spec, engine=engine)
+    sources = [S.StreamSource(specs, seed=pipeline_spec.seed * 977 + i)
                for i in range(num_sources)]
     controller = None
     trajectory: list[dict] = []
     if target_rel_error is not None:
-        from repro.runtime.budget import BudgetConfig, BudgetController
+        from repro.runtime.budget import (BudgetConfig, BudgetController,
+                                          WorstTenantArbiter)
 
-        controller = BudgetController(
-            BudgetConfig(min_size=8, max_size=int(tree.max_sample_sizes[0]),
-                         target_rel_error=target_rel_error),
-            initial_size=int(tree.sample_sizes[0]))
+        cfg = BudgetConfig(min_size=pipeline_spec.budget.min_size,
+                           max_size=int(tree.max_sample_sizes[0]),
+                           target_rel_error=target_rel_error,
+                           kp=pipeline_spec.budget.kp,
+                           ki=pipeline_spec.budget.ki)
+        if len(pipeline_spec.tenants) > 1:
+            # N tenants share the tree: worst-tenant-first fairness on
+            # the one budget knob (see runtime.budget).
+            controller = WorstTenantArbiter(
+                cfg, initial_size=int(tree.sample_sizes[0]))
+        else:
+            controller = BudgetController(
+                cfg, initial_size=int(tree.sample_sizes[0]))
     # Only materialize the raw stream when the caller asked for it —
     # collection is O(items) host memory/time, which would silently void
     # the scan engine's flat-memory property on long --queries runs.
@@ -156,14 +295,30 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
 
     def _feedback(new_windows: list[dict], step: int) -> None:
         """Feed the controller the freshest measured relative ±2σ error
-        and move every level's budget (§IV-B adaptive feedback)."""
+        and move every level's budget (§IV-B adaptive feedback). With
+        N tenants the error is attributed per tenant and the worst-off
+        tenant drives the shared budget (worst-tenant-first fairness)."""
         if controller is None or not new_windows:
             return
-        rels = [_window_rel_error(w, tree.plan) for w in new_windows]
-        rel = float(np.mean([r for r in rels if np.isfinite(r)] or [0.0]))
-        size = controller.update(rel_error=rel)
+        if hasattr(controller, "last_tenant"):     # WorstTenantArbiter
+            acc: dict[str, list] = {}
+            for w in new_windows:
+                for t, r in _tenant_rel_errors(w, tree.plan).items():
+                    acc.setdefault(t, []).append(r)
+            per = {t: float(np.mean([r for r in rs if np.isfinite(r)]
+                                    or [0.0])) for t, rs in acc.items()}
+            size = controller.update(per)
+            entry = dict(step=step, rel_error=max(per.values() or [0.0]),
+                         size=size, tenant=controller.last_tenant,
+                         tenant_rel_errors=per)
+        else:
+            rels = [_window_rel_error(w, tree.plan) for w in new_windows]
+            rel = float(np.mean([r for r in rels if np.isfinite(r)]
+                                or [0.0]))
+            size = controller.update(rel_error=rel)
+            entry = dict(step=step, rel_error=rel, size=size)
         tree.set_sample_sizes([size] * len(tree.fanin))
-        trajectory.append(dict(step=step, rel_error=rel, size=size))
+        trajectory.append(entry)
 
     if engine == "scan":
         epoch_t = min(epoch_ticks or 64, ticks)
@@ -192,12 +347,30 @@ def run_pipeline(specs, *, fraction: float, ticks: int, capacity: int | None = N
 
     exact_sum = 0.0
     exact_cnt = 0
+    ingest_truncation_warned = False
     t0 = time.time()
     if engine == "scan":
         for e in range(n_epochs):
             b = S.batch_ingest(sources, epoch_t, tree.fanin[0], width)
             exact_sum += b.exact_sum
             exact_cnt += b.exact_count
+            dropped = int((b.offered - b.counts).sum())
+            if dropped and not ingest_truncation_warned:
+                # Level-0 drops carry no metadata, so truncation biases
+                # every estimate downward with no error signal — this
+                # happens when the stream offered to run_pipeline is
+                # heavier than the load the spec's capacity was
+                # provisioned for (e.g. a spec built for a different
+                # num_sources/rates).
+                import warnings
+
+                warnings.warn(
+                    f"level-0 ingest truncated {dropped} items in epoch "
+                    f"{e} (capacity {width} per node/tick is below the "
+                    f"offered load) — estimates will bias low; rebuild "
+                    f"the PipelineSpec for the actual source count and "
+                    f"rates", RuntimeWarning, stacklevel=2)
+                ingest_truncation_warned = True
             if collect:
                 for tt in range(epoch_t):
                     for node in range(tree.fanin[0]):

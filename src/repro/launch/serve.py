@@ -2,12 +2,15 @@
 
 The request stream is the ApproxIoT input: per-request latency/token
 records form sub-streams (stratified by request class), and the serving
-dashboard is the first consumer of the continuous query plane: its
-standing queries (request count → QPS, mean latency, p50/p99 via the
-quantile sketch) are registered once in a ``repro.query`` registry and
-answered together from ONE weighted sample — instead of logging every
-request or issuing ad-hoc per-metric query calls. The paper's analytics
-plane applied to an inference fleet.
+dashboard runs on a REAL compiled pipeline — each serving batch's
+telemetry is one tick of ingest into the emulated edge hierarchy
+(edge aggregators → datacenter root), where the dashboard's standing
+queries (request count → QPS, mean latency, p50/p99 via the quantile
+sketch) are a query **tenant** answered at the root every window from
+the weighted hierarchical sample. One ``PipelineSpec`` declares the
+whole thing; ``repro.api.compile`` runs it in one fused dispatch per
+epoch. The paper's analytics plane applied to an inference fleet,
+end to end: telemetry → hierarchy → query plane → dashboard.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
         --requests 64 --decode-len 16
@@ -21,12 +24,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import registry
-from repro.core import whs
-from repro.core.types import IntervalBatch, StratumMeta
+from repro.data import stream as S
 from repro.models import model as M
 from repro.optim import train_step
 from repro.query.registry import QueryRegistry
+
+
+NUM_CLASSES = 4          # request classes = telemetry strata
+EDGE_NODES = 2           # telemetry aggregators in front of the root
+
+
+def dashboard_registry() -> QueryRegistry:
+    """The dashboard's standing queries, registered once."""
+    return (QueryRegistry()
+            .register_count("requests")
+            .register_sum("latency_total_ms")
+            .register_mean("latency_mean_ms")
+            .register_quantile("latency_q_ms", qs=(0.5, 0.99), capacity=256))
+
+
+def telemetry_spec(capacity: int, fraction: float,
+                   seed: int = 0) -> api.PipelineSpec:
+    """The serving fleet's telemetry plane as one declarative spec:
+    per-request records → 2 edge aggregators → 1 datacenter root, the
+    dashboard as a query tenant on the shared tree."""
+    return api.PipelineSpec(
+        topology=api.TopologySpec(fanin=(EDGE_NODES, 1), capacity=capacity,
+                                  num_strata=NUM_CLASSES),
+        sampler=api.SamplerSpec(mode="whs", backend="topk",
+                                fraction=fraction),
+        tenants=(dashboard_registry().as_tenant("dashboard"),),
+        seed=seed,
+    )
 
 
 def main(argv=None):
@@ -50,9 +81,13 @@ def main(argv=None):
     decode = jax.jit(train_step.make_decode_step(cfg), donate_argnums=(1,))
 
     rng = np.random.default_rng(0)
-    lat_records, lat_strata = [], []
+    tick_records: list[tuple[np.ndarray, np.ndarray]] = []
     t_all = time.time()
     n_batches = args.requests // args.batch
+    if n_batches == 0:
+        ap.error(f"--requests {args.requests} < --batch {args.batch}: "
+                 f"no serving batch would run (requests are served in "
+                 f"whole batches)")
     for b in range(n_batches):
         toks = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
         cache = M.init_cache(cfg, args.batch, max_len)
@@ -68,49 +103,57 @@ def main(argv=None):
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         jax.block_until_ready(tok)
         dt = (time.time() - t0) / args.batch
-        lat_records += [dt * 1000] * args.batch              # ms per request
-        lat_strata += list(rng.integers(0, 4, args.batch))   # request class
-
-    # ---- approximate telemetry through the query registry ----------------
-    # The dashboard's standing queries, registered once; the compiled plan
-    # answers all of them from the same weighted sample in one evaluation.
+        # one tick of telemetry per serving batch: ms per request,
+        # stratified by request class
+        tick_records.append((
+            np.full((args.batch,), dt * 1000, np.float32),
+            rng.integers(0, NUM_CLASSES, args.batch).astype(np.int32)))
     wall = time.time() - t_all
-    dash = (QueryRegistry()
-            .register_count("requests")
-            .register_sum("latency_total_ms")
-            .register_mean("latency_mean_ms")
-            .register_quantile("latency_q_ms", qs=(0.5, 0.99), capacity=256))
-    plan = dash.compile(num_strata=4)
 
-    m = len(lat_records)
-    batch = IntervalBatch(
-        value=jnp.asarray(lat_records, jnp.float32),
-        stratum=jnp.asarray(lat_strata, jnp.int32),
-        valid=jnp.ones((m,), bool),
-        meta=StratumMeta.identity(4),
-    )
-    res = whs.whsamp(jax.random.PRNGKey(1), batch,
-                     jnp.float32(args.telemetry_fraction * m), 4)
-    _, answers, bounds = plan.evaluate(jax.random.PRNGKey(2), batch, res,
-                                       plan.init_state())
-    answers, bounds = np.asarray(answers), np.asarray(bounds)
-    a = lambda name: plan.answer(answers, name)
-    b = lambda name: plan.answer(bounds, name)
+    # ---- telemetry through the real pipeline -----------------------------
+    # Each serving batch is one tick into the 2→1 hierarchy; the compiled
+    # pipeline samples at every hop and the dashboard tenant's standing
+    # queries are answered at the root each window — one fused dispatch
+    # for the whole epoch.
+    capacity = max(64, args.batch)
+    pipe = api.compile(telemetry_spec(capacity, args.telemetry_fraction))
+    state = pipe.init()
+    batch = S.ticks_to_ingest(tick_records, n_nodes=EDGE_NODES,
+                              width=capacity)
+    state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
+                               batch.strata, batch.counts)
+    rows = pipe.rows(wa)
+    m = batch.exact_count
+    a = lambda name, row: pipe.answer(row["answers"], name,
+                                      tenant="dashboard")
+    bnd = lambda name, row: pipe.answer(row["bounds"], name,
+                                        tenant="dashboard")
 
-    exact_mean = float(np.mean(lat_records))
-    qps = float(a("requests")[0]) / max(wall, 1e-9)
-    p50, p99 = a("latency_q_ms")
+    # CLT queries aggregate across windows; the quantile sketch is
+    # continuous (its state spans the whole epoch), so the last window
+    # answers over every request served.
+    last = rows[-1]
+    n_est = float(sum(a("requests", r)[0] for r in rows))
+    total_est = float(sum(a("latency_total_ms", r)[0] for r in rows))
+    mean_est = total_est / max(n_est, 1e-9)
+    mean_bnd = float(max(bnd("latency_mean_ms", r)[0] for r in rows))
+    p50, p99 = a("latency_q_ms", last)
+    exact_all = np.concatenate([v for v, _ in tick_records])
+    exact_mean = float(exact_all.mean())
+    n_kept = int(sum(r["n_sampled"] for r in rows))
     print(f"served {m} requests in {wall:.1f}s")
-    print(f"telemetry (from {int(res.selected.sum())}/{m} sampled records, "
-          f"{plan.k} standing queries, one evaluation):")
-    print(f"  QPS              ≈ {qps:.2f}")
-    print(f"  total latency-ms ≈ {a('latency_total_ms')[0]:.1f} "
-          f"± {b('latency_total_ms')[0]:.1f} (2σ)")
-    print(f"  mean latency-ms  ≈ {a('latency_mean_ms')[0]:.2f} "
-          f"± {b('latency_mean_ms')[0]:.2f} (exact {exact_mean:.2f})")
-    print(f"  p50 / p99 ms     ≈ {p50:.2f} / {p99:.2f} "
-          f"(sketch rank-ε {b('latency_q_ms')[0]:.3f})")
-    return float(a("latency_mean_ms")[0]), exact_mean
+    print(f"telemetry plane: {len(rows)} windows through the "
+          f"{EDGE_NODES}→1 hierarchy, {pipe.plan.k} standing queries, "
+          f"1 fused dispatch, {n_kept}/{m} records at the root")
+    print(f"  QPS              ≈ {n_est / max(wall, 1e-9):.2f}")
+    print(f"  total latency-ms ≈ {total_est:.1f} "
+          f"± {float(sum(bnd('latency_total_ms', r)[0] for r in rows)):.1f}"
+          f" (2σ)")
+    print(f"  mean latency-ms  ≈ {mean_est:.2f} ± {mean_bnd:.2f} "
+          f"(exact {exact_mean:.2f})")
+    print(f"  p50 / p99 ms     ≈ {float(p50):.2f} / {float(p99):.2f} "
+          f"(sketch rank-ε {float(bnd('latency_q_ms', last)[0]):.3f})")
+    return mean_est, exact_mean
 
 
 if __name__ == "__main__":

@@ -206,3 +206,19 @@ def cache_specs_tree(cache_shape, mesh: Mesh):
 def to_named(tree_specs, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def spmd_epoch_specs(axis_name: str = "data"):
+    """(in_specs, out_specs) for the analytics SPMD epoch under
+    ``shard_map`` (``repro.api.compile(spec, mesh=...)``): epoch batches
+    are ``IntervalBatch``es with a leading tick axis — items sharded
+    over ``axis_name`` on the item axis, per-tick metadata sets
+    replicated; the root's (sum, mean) results are replicated (every
+    device computes the root stage redundantly)."""
+    from repro.core.types import IntervalBatch, StratumMeta
+
+    item = P(None, axis_name)
+    in_specs = (P(), IntervalBatch(item, item, item,
+                                   StratumMeta(P(), P())))
+    out_specs = (P(), P())
+    return in_specs, out_specs

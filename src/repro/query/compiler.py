@@ -170,3 +170,121 @@ class CompiledQueryPlan:
             elif sp.kind == "heavy_hitters":
                 out[o:o + w] = np.nan
         return out
+
+
+class MultiTenantPlan:
+    """K tenants' query registries fused into ONE batched root evaluation.
+
+    Each tenant keeps its own ``CompiledQueryPlan`` (so its PRNG stream,
+    sketch state, and answers are bit-identical to a single-tenant run of
+    the same registry), but all plans evaluate inside the SAME traced root
+    step from the SAME window sample — N tenants share one tree dispatch
+    per epoch. The flat answer vector is the tenants' vectors concatenated
+    in registration order; ``tenant_slice``/``answer`` route per-tenant
+    views back out, and ``layout()`` exposes ``"tenant/query"``-prefixed
+    names so shared consumers (error-budget feedback, dashboards) can
+    attribute every slot to its tenant.
+
+    Duck-types ``CompiledQueryPlan`` (``evaluate``/``init_state``/
+    ``n_out``/``layout``/``answer``), so every engine — scan tick,
+    level/loop root steps — accepts it unchanged.
+    """
+
+    def __init__(self, tenants, num_strata: int):
+        """``tenants``: ordered ``(name, (QuerySpec, ...))`` pairs."""
+        tenants = tuple((str(n), tuple(specs)) for n, specs in tenants)
+        if not tenants:
+            raise ValueError("cannot compile an empty tenant list")
+        names = [n for n, _ in tenants]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate tenant names: {dup}")
+        self.tenant_names = tuple(names)
+        self.num_strata = int(num_strata)
+        self.plans = tuple(CompiledQueryPlan(specs, num_strata)
+                           for _, specs in tenants)
+        self._offsets = {}
+        off = 0
+        for name, plan in zip(self.tenant_names, self.plans):
+            self._offsets[name] = off
+            off += plan.n_out
+        self.n_out = off
+
+    @property
+    def k(self) -> int:
+        return sum(p.k for p in self.plans)
+
+    def plan_for(self, tenant: str) -> CompiledQueryPlan:
+        if tenant not in self._offsets:
+            raise KeyError(f"unknown tenant {tenant!r}; "
+                           f"registered: {list(self.tenant_names)}")
+        return self.plans[self.tenant_names.index(tenant)]
+
+    def tenant_slice(self, tenant: str) -> tuple[int, int]:
+        """(offset, width) of one tenant's block in the flat vector."""
+        return self._offsets[tenant], self.plan_for(tenant).n_out
+
+    def layout(self) -> dict[str, tuple[int, int, str]]:
+        """``"tenant/query"`` → (absolute offset, width, kind)."""
+        out = {}
+        for name, plan in zip(self.tenant_names, self.plans):
+            base = self._offsets[name]
+            for q, (o, w, kind) in plan.layout().items():
+                out[f"{name}/{q}"] = (base + o, w, kind)
+        return out
+
+    def answer(self, vec: np.ndarray, name: str) -> np.ndarray:
+        """Slice one ``"tenant/query"`` answer out of a flat vector."""
+        o, w, _ = self.layout()[name]
+        return np.asarray(vec)[..., o:o + w]
+
+    def tenant_answers(self, vec: np.ndarray, tenant: str) -> np.ndarray:
+        o, w = self.tenant_slice(tenant)
+        return np.asarray(vec)[..., o:o + w]
+
+    def init_state(self) -> tuple:
+        return tuple(p.init_state() for p in self.plans)
+
+    def evaluate(self, key: jax.Array, batch: IntervalBatch,
+                 res: SampleResult, state: tuple) -> tuple:
+        """One fused evaluation for all tenants. Every tenant plan gets
+        the SAME key — exactly what a single-tenant run would pass — so
+        each tenant's answers/bounds/sketch state bit-match an isolated
+        run of its registry on the same sample."""
+        states, outs, bnds = [], [], []
+        for plan, st in zip(self.plans, state):
+            st2, a, b = plan.evaluate(key, batch, res, st)
+            states.append(st2)
+            outs.append(a)
+            bnds.append(b)
+        return (tuple(states), jnp.concatenate(outs), jnp.concatenate(bnds))
+
+    def exact_answers(self, values: np.ndarray,
+                      strata: np.ndarray | None = None) -> np.ndarray:
+        return np.concatenate([p.exact_answers(values, strata)
+                               for p in self.plans])
+
+
+def tenant_rel_errors(plan, answers_row, bounds_row,
+                      default_tenant: str = "default") -> dict[str, float]:
+    """Per-tenant measured relative error of one window: the WORST
+    relative ±2σ bound across each tenant's CLT queries (sum/mean) — the
+    attribution signal the worst-tenant-first budget arbiter consumes.
+    Sketch queries carry structural bounds and don't vote; a tenant with
+    no CLT queries reports 0.0 (it never drives the shared budget). A
+    plain single-registry ``CompiledQueryPlan`` attributes everything to
+    ``default_tenant``. THE one implementation — the compiled-pipeline
+    method and the analytics feedback loop both call this."""
+    answers_row = np.asarray(answers_row)
+    bounds_row = np.asarray(bounds_row)
+    multi = hasattr(plan, "tenant_names")
+    names = plan.tenant_names if multi else (default_tenant,)
+    out = {t: 0.0 for t in names}
+    for name, (off, _, kind) in plan.layout().items():
+        if kind not in ("sum", "mean"):
+            continue
+        tenant = name.split("/", 1)[0] if multi else names[0]
+        est = abs(float(answers_row[..., off]))
+        rel = float(bounds_row[..., off]) / max(est, 1e-9)
+        out[tenant] = max(out[tenant], rel)
+    return out

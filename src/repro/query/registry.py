@@ -128,6 +128,14 @@ class QueryRegistry:
 
         return compiler.CompiledQueryPlan(self.specs, num_strata)
 
+    def as_tenant(self, name: str):
+        """Wrap this registry as one ``repro.api`` pipeline tenant: N
+        tenants' registries share one tree (a single batched root
+        evaluation per window) with per-tenant answer routing."""
+        from repro.api.spec import TenantSpec
+
+        return TenantSpec.from_registry(name, self)
+
     @classmethod
     def from_tokens(cls, tokens: str) -> "QueryRegistry":
         """Parse the CLI mini-language: comma-separated query tokens.

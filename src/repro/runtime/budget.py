@@ -48,3 +48,33 @@ class BudgetController:
         self.size = self.size * (1.0 + max(min(scale, 1.0), -0.5))
         self.size = max(min(self.size, c.max_size), c.min_size)
         return int(self.size)
+
+
+class WorstTenantArbiter:
+    """Fairness for N query tenants sharing one tree's error budget:
+    **worst-tenant-first**. Each epoch the tenant with the largest
+    measured relative error drives the shared ``BudgetController`` —
+    the sample budget moves to satisfy the worst-off tenant, so no
+    tenant can be starved by a neighbour whose queries are already
+    comfortably inside the target (min-max fairness on the shared
+    knob; the budget only shrinks when *every* tenant is under
+    target). ``last_tenant`` records who drove each move for
+    attribution/telemetry."""
+
+    def __init__(self, cfg: BudgetConfig, initial_size: int):
+        self.controller = BudgetController(cfg, initial_size)
+        self.last_tenant: str | None = None
+
+    @property
+    def size(self) -> float:
+        return self.controller.size
+
+    def update(self, tenant_rel_errors: dict) -> int:
+        """``{tenant: measured relative ±2σ error}`` → new budget."""
+        finite = {t: e for t, e in tenant_rel_errors.items()
+                  if e == e and e != float("inf")}
+        if not finite:
+            return int(self.controller.size)
+        worst = max(finite, key=lambda t: finite[t])
+        self.last_tenant = worst
+        return self.controller.update(rel_error=finite[worst])
