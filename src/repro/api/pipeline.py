@@ -77,7 +77,99 @@ class WindowAnswers(NamedTuple):
     n_forwarded: Any
 
 
-class CompiledPipeline:
+class QueryRouting:
+    """Per-tenant answer routing + error attribution over a compiled
+    (possibly multi-tenant) query plan — shared by the local
+    ``CompiledPipeline`` and the mesh ``repro.api.spmd.
+    CompiledSpmdPipeline``, so a driver can consume either front door's
+    ``WindowAnswers`` through one surface. Consumers need
+    ``self.plan`` (compiled plan or ``None``) and ``self.tenant_names``.
+    """
+
+    plan = None
+    tenant_names: tuple = ()
+
+    # -------------------------------------------------------- routing --
+    def rows(self, wa: "WindowAnswers") -> list[dict]:
+        """Host-side result rows (one dict per flushed root window) in
+        the legacy ``HostTree.results`` layout — the migration shim for
+        drivers that consumed the old list."""
+        host = [np.asarray(x) for x in
+                (wa.tick, wa.ok, wa.sum, wa.sum_var, wa.mean, wa.mean_var,
+                 wa.n_sampled, wa.histogram)]
+        ts, ok, se, sv, me, mv, nsel, hist = host
+        ans = np.asarray(wa.answers) if wa.answers is not None else None
+        bnd = np.asarray(wa.bounds) if wa.bounds is not None else None
+        out = []
+        for i in range(len(ts)):
+            if not ok[i]:
+                continue
+            row = dict(tick=int(ts[i]), sum=float(se[i]),
+                       sum_var=float(sv[i]), mean=float(me[i]),
+                       mean_var=float(mv[i]), n_sampled=int(nsel[i]),
+                       histogram=hist[i])
+            if ans is not None:
+                row["answers"], row["bounds"] = ans[i], bnd[i]
+            out.append(row)
+        return out
+
+    def query_layout(self, tenant: str | None = None) -> dict:
+        """name → (offset, width, kind) into the flat answer vector.
+        With several tenants names are ``"tenant/query"``; pass
+        ``tenant=`` for one tenant's block with local names and
+        absolute offsets."""
+        if self.plan is None:
+            raise SpecError("this pipeline registers no query tenants")
+        if tenant is None:
+            return self.plan.layout()
+        if len(self.tenant_names) == 1:
+            if tenant != self.tenant_names[0]:
+                raise KeyError(f"unknown tenant {tenant!r}; registered: "
+                               f"{list(self.tenant_names)}")
+            return self.plan.layout()
+        base, _ = self.plan.tenant_slice(tenant)
+        return {q: (base + o, w, kind) for q, (o, w, kind)
+                in self.plan.plan_for(tenant).layout().items()}
+
+    def answer(self, vec, name: str, tenant: str | None = None):
+        """Slice one query's answers out of a flat (host) vector; with
+        several tenants pass ``tenant=`` or a ``"tenant/query"`` name."""
+        lay = self.query_layout(tenant)
+        if name not in lay:
+            raise KeyError(f"unknown query {name!r}; available: "
+                           f"{sorted(lay)}")
+        o, w, _ = lay[name]
+        return np.asarray(vec)[..., o:o + w]
+
+    def tenant_answers(self, vec, tenant: str):
+        """One tenant's block of a flat answers/bounds vector — identical
+        bit-for-bit to the vector a single-tenant pipeline of the same
+        registry produces."""
+        if self.plan is None:
+            raise SpecError("this pipeline registers no query tenants")
+        if len(self.tenant_names) == 1:
+            if tenant != self.tenant_names[0]:
+                raise KeyError(f"unknown tenant {tenant!r}; registered: "
+                               f"{list(self.tenant_names)}")
+            return np.asarray(vec)[..., :self.plan.n_out]
+        o, w = self.plan.tenant_slice(tenant)
+        return np.asarray(vec)[..., o:o + w]
+
+    def tenant_rel_errors(self, answers_row, bounds_row) -> dict[str, float]:
+        """Per-tenant measured relative error of one window — the
+        per-tenant attribution signal the shared budget controller
+        consumes; see ``query.compiler.tenant_rel_errors`` (the one
+        implementation) for the exact rule."""
+        from repro.query.compiler import tenant_rel_errors
+
+        if self.plan is None:
+            return {}
+        return tenant_rel_errors(
+            self.plan, answers_row, bounds_row,
+            default_tenant=self.tenant_names[0])
+
+
+class CompiledPipeline(QueryRouting):
     """Immutable compilation of one ``PipelineSpec`` (see module doc)."""
 
     def __init__(self, spec: PipelineSpec):
@@ -208,86 +300,6 @@ class CompiledPipeline:
             return state
         return state._replace(
             tree=state.tree._replace(qstate=self.plan.init_state()))
-
-    # -------------------------------------------------------- routing --
-    def rows(self, wa: WindowAnswers) -> list[dict]:
-        """Host-side result rows (one dict per flushed root window) in
-        the legacy ``HostTree.results`` layout — the migration shim for
-        drivers that consumed the old list."""
-        host = [np.asarray(x) for x in
-                (wa.tick, wa.ok, wa.sum, wa.sum_var, wa.mean, wa.mean_var,
-                 wa.n_sampled, wa.histogram)]
-        ts, ok, se, sv, me, mv, nsel, hist = host
-        ans = np.asarray(wa.answers) if wa.answers is not None else None
-        bnd = np.asarray(wa.bounds) if wa.bounds is not None else None
-        out = []
-        for i in range(len(ts)):
-            if not ok[i]:
-                continue
-            row = dict(tick=int(ts[i]), sum=float(se[i]),
-                       sum_var=float(sv[i]), mean=float(me[i]),
-                       mean_var=float(mv[i]), n_sampled=int(nsel[i]),
-                       histogram=hist[i])
-            if ans is not None:
-                row["answers"], row["bounds"] = ans[i], bnd[i]
-            out.append(row)
-        return out
-
-    def query_layout(self, tenant: str | None = None) -> dict:
-        """name → (offset, width, kind) into the flat answer vector.
-        With several tenants names are ``"tenant/query"``; pass
-        ``tenant=`` for one tenant's block with local names and
-        absolute offsets."""
-        if self.plan is None:
-            raise SpecError("this pipeline registers no query tenants")
-        if tenant is None:
-            return self.plan.layout()
-        if len(self.tenant_names) == 1:
-            if tenant != self.tenant_names[0]:
-                raise KeyError(f"unknown tenant {tenant!r}; registered: "
-                               f"{list(self.tenant_names)}")
-            return self.plan.layout()
-        base, _ = self.plan.tenant_slice(tenant)
-        return {q: (base + o, w, kind) for q, (o, w, kind)
-                in self.plan.plan_for(tenant).layout().items()}
-
-    def answer(self, vec, name: str, tenant: str | None = None):
-        """Slice one query's answers out of a flat (host) vector; with
-        several tenants pass ``tenant=`` or a ``"tenant/query"`` name."""
-        lay = self.query_layout(tenant)
-        if name not in lay:
-            raise KeyError(f"unknown query {name!r}; available: "
-                           f"{sorted(lay)}")
-        o, w, _ = lay[name]
-        return np.asarray(vec)[..., o:o + w]
-
-    def tenant_answers(self, vec, tenant: str):
-        """One tenant's block of a flat answers/bounds vector — identical
-        bit-for-bit to the vector a single-tenant pipeline of the same
-        registry produces."""
-        if self.plan is None:
-            raise SpecError("this pipeline registers no query tenants")
-        if len(self.tenant_names) == 1:
-            if tenant != self.tenant_names[0]:
-                raise KeyError(f"unknown tenant {tenant!r}; registered: "
-                               f"{list(self.tenant_names)}")
-            return np.asarray(vec)[..., :self.plan.n_out]
-        o, w = self.plan.tenant_slice(tenant)
-        return np.asarray(vec)[..., o:o + w]
-
-    def tenant_rel_errors(self, answers_row, bounds_row) -> dict[str, float]:
-        """Per-tenant measured relative error of one window — the
-        per-tenant attribution signal the shared budget controller
-        consumes; see ``query.compiler.tenant_rel_errors`` (the one
-        implementation) for the exact rule."""
-        from repro.query.compiler import tenant_rel_errors
-
-        if self.plan is None:
-            return {}
-        return tenant_rel_errors(
-            self.plan, answers_row, bounds_row,
-            default_tenant=self.tenant_names[0])
-
 
 # ------------------------------------------------------- checkpointing --
 def save_state(root, step: int, state: PipelineState, *,

@@ -1,27 +1,45 @@
 """``compile(spec, mesh=...)`` — the same spec on the pod-scale data plane.
 
-The SPMD lowering of a ``PipelineSpec`` is the paper's §III-E two-level
-hierarchy run in-graph across a mesh axis: every device WHS-samples its
-local interval batch with the spec's backend/allocation, compacts to the
-spec's level-0 budget, all-gathers the *reservoirs only*, and the root
-stage re-samples to the spec's root budget and answers SUM/MEAN with
-error bounds — ``core.tree.spmd_local_then_root_epoch`` under
-``shard_map``, one dispatch per epoch of ``T`` interval batches.
+The SPMD lowering of a ``PipelineSpec`` is the paper's §III-E hierarchy
+run in-graph across a mesh axis, one jitted dispatch per epoch of ``T``
+interval batches. Three lowerings share the front door:
 
-The pipeline is stateless between intervals (the SPMD path carries no
-sticky windows — each interval batch is complete), so ``init`` returns
-an empty state and ``run_epoch`` is a pure function of (key, batches).
+* **Query tenants registered** (the full multi-tenant query plane):
+  every device WHS-samples its shard of each window with the spec's
+  backend/allocation and its own DONATED sketch state, and the window is
+  answered by one batched root ``MultiTenantPlan`` evaluation over
+  MERGED per-device summaries — ``psum``-ed CLT moments, all-gathered
+  quantile buffers and count-min tables (``query.sketches`` merge
+  algebra). Only O(sketch) summaries ever cross the device boundary;
+  raw reservoir items never do. Per-tenant ``WindowAnswers`` come back
+  with the same routing surface as the local pipeline
+  (``answer``/``tenant_answers``/``tenant_rel_errors``), so the
+  worst-tenant-first error-budget loop closes on the mesh: the applied
+  sample budget is a TRACED input — moving it between epochs never
+  retraces. State (global tick + per-device sketches) is explicit and
+  donated, so multi-epoch runs resume bit-identically to one long epoch.
+* **``whs`` without tenants** (the original §III-E two-level path):
+  every device samples its local interval batch, compacts to the spec's
+  level-0 budget, all-gathers the *reservoirs*, and the root stage
+  re-samples and answers SUM/MEAN with error bounds —
+  ``core.tree.spmd_local_then_root_epoch``. Stateless between intervals.
+* **``srs``** (the §IV-B baseline): per-device coin-flip keeps, HT
+  SUM / sample MEAN merged from ``psum``-ed moments — no items cross.
 """
 from __future__ import annotations
 
+from typing import Any, NamedTuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import spec as specmod
+from repro.api.pipeline import QueryRouting, WindowAnswers
 from repro.api.spec import PipelineSpec, SpecError
 from repro.core import tree as T
 from repro.core.types import IntervalBatch
-from repro.launch.sharding import spmd_epoch_specs
+from repro.launch.sharding import spmd_epoch_specs, spmd_query_epoch_specs
 
 
 def _shard_map():
@@ -46,27 +64,31 @@ def _rep_check_kwargs(fn, enabled: bool) -> dict:
     return {name: enabled}
 
 
-class CompiledSpmdPipeline:
-    """Immutable SPMD compilation of one ``PipelineSpec``.
+class SpmdPipelineState(NamedTuple):
+    """Explicit state of the tenant SPMD pipeline: the next global tick
+    (i32 scalar, replicated) and the standing queries' sketch state with
+    a leading per-device axis sharded over the mesh (device ``d`` owns
+    slice ``[d]`` of every leaf). A plain pytree — donate it into
+    ``run_epoch`` exactly like the local ``PipelineState``."""
 
-    ``run_epoch(state, key, batches)`` takes an ``IntervalBatch`` whose
-    leaves carry a leading tick axis (``value[T, M]`` sharded over the
-    mesh axis on M) and returns ``(state, (sum, mean))`` — per-tick
-    ``QueryResult``s with rigorous variance, replicated across the axis
-    (every device computes the root redundantly; no single point of
-    failure)."""
+    tick: Any
+    qstate: Any
+
+
+class CompiledSpmdPipeline(QueryRouting):
+    """Immutable SPMD compilation of one ``PipelineSpec`` (see module
+    doc for the three lowerings).
+
+    ``run_epoch(state, key, batches[, budgets])`` takes an
+    ``IntervalBatch`` whose leaves carry a leading tick axis
+    (``value[T, M]`` sharded over the mesh axis on M). With tenants it
+    returns ``(state', WindowAnswers)`` — per-window answers/bounds for
+    every tenant, replicated across the axis (every device evaluates the
+    root redundantly from the identical merged summaries; no single
+    point of failure). Without tenants it returns the legacy
+    ``(state, (sum, mean))`` per-tick ``QueryResult`` pair."""
 
     def __init__(self, spec: PipelineSpec, mesh, *, axis_name: str = "data"):
-        if spec.sampler.mode != "whs":
-            raise SpecError("the SPMD path runs the weighted hierarchical "
-                            "sampler: use sampler.mode='whs' (the SRS "
-                            "baseline exists only in the emulated tree)")
-        if spec.tenants:
-            raise SpecError("query tenants are not lowered to the SPMD "
-                            "path yet — drop spec.tenants for mesh "
-                            "compilation (the root answers SUM/MEAN with "
-                            "bounds); see ROADMAP 'Sketch answers inside "
-                            "spmd_local_then_root'")
         if axis_name not in mesh.axis_names:
             raise SpecError(f"mesh has no axis {axis_name!r} "
                             f"(axes: {mesh.axis_names})")
@@ -74,35 +96,182 @@ class CompiledSpmdPipeline:
         self.spec = spec
         self.mesh = mesh
         self.axis_name = axis_name
+        self.n_devices = int(dict(mesh.shape)[axis_name])
+        self.plan = r.plan
+        self.tenant_names = tuple(t.name for t in spec.tenants)
         self.local_budget = int(r.sample_sizes[0])
+        self.max_local_budget = int(r.max_sample_sizes[0])
         self.root_budget = int(r.sample_sizes[-1])
-        in_specs, out_specs = spmd_epoch_specs(axis_name)
-        kw = dict(axis_name=axis_name,
-                  num_strata=spec.topology.num_strata,
-                  local_budget=self.local_budget,
-                  root_budget=self.root_budget,
-                  allocation=spec.sampler.allocation,
-                  sampler_backend=spec.sampler.backend)
+        self.trace_counter = {"traces": 0}
         sm = _shard_map()
         # pallas_call has no replication rule under shard_map's rep/vma
         # check — the kernel backend opts out (results are still
         # replicated by construction, see spmd_local_then_root).
-        fn = sm(lambda k, b: T.spmd_local_then_root_epoch(k, b, **kw),
-                mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                **_rep_check_kwargs(sm, spec.sampler.backend != "pallas"))
-        self._fn = jax.jit(fn)
+        rep_kw = _rep_check_kwargs(sm, spec.sampler.backend != "pallas")
+        if self.plan is not None:
+            # Tenant lowering: merged-summary query plane. Spec
+            # validation already guarantees mode == "whs" here (tenants
+            # need WHS stratum metadata).
+            parts = spmd_query_epoch_specs(axis_name, self.plan.init_state())
+            state_spec = SpmdPipelineState(tick=parts["replicated"],
+                                           qstate=parts["qstate"])
+            kw = dict(axis_name=axis_name,
+                      max_budget=self.max_local_budget,
+                      num_strata=spec.topology.num_strata,
+                      allocation=spec.sampler.allocation,
+                      sampler_backend=spec.sampler.backend)
+            plan = self.plan
+            counter = self.trace_counter
+
+            def epoch(state, key, budget, batches):
+                counter["traces"] += 1
+                n_ticks = batches.value.shape[0]
+                local_q = jax.tree.map(lambda v: v[0], state.qstate)
+                qfinal, outs = T.spmd_query_plane_epoch(
+                    key, state.tick, budget, batches, local_q, plan, **kw)
+                ts = state.tick + jnp.arange(n_ticks, dtype=jnp.int32)
+                state2 = SpmdPipelineState(
+                    tick=state.tick + jnp.int32(n_ticks),
+                    qstate=jax.tree.map(lambda v: v[None], qfinal))
+                return state2, (ts,) + outs
+
+            fn = sm(epoch, mesh=mesh,
+                    in_specs=(state_spec, parts["replicated"],
+                              parts["replicated"], parts["batches"]),
+                    out_specs=(state_spec, parts["replicated"]), **rep_kw)
+            self._fn = jax.jit(fn, donate_argnums=(0,))
+        elif spec.sampler.mode == "srs":
+            in_specs, out_specs = spmd_epoch_specs(axis_name)
+            frac = float(spec.sampler.fraction)
+
+            def srs_epoch(key, batches):
+                self.trace_counter["traces"] += 1
+                return T.spmd_srs_epoch(key, batches, axis_name=axis_name,
+                                        fraction=frac)
+
+            fn = sm(srs_epoch, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, **rep_kw)
+            self._fn = jax.jit(fn)
+        else:
+            in_specs, out_specs = spmd_epoch_specs(axis_name)
+            kw = dict(axis_name=axis_name,
+                      num_strata=spec.topology.num_strata,
+                      local_budget=self.local_budget,
+                      root_budget=self.root_budget,
+                      allocation=spec.sampler.allocation,
+                      sampler_backend=spec.sampler.backend)
+            fn = sm(lambda k, b: T.spmd_local_then_root_epoch(k, b, **kw),
+                    mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    **rep_kw)
+            self._fn = jax.jit(fn)
 
     @property
     def default_key(self) -> jax.Array:
         return jax.random.PRNGKey(self.spec.seed)
 
-    def init(self, key: jax.Array | None = None) -> tuple:
-        """The SPMD path carries no cross-interval state: empty pytree."""
+    def init(self, key: jax.Array | None = None):
+        """Fresh explicit state. With tenants: global tick 0 plus one
+        empty sketch state per device (leaves ``[n_devices, ...]``).
+        Without tenants the path is stateless between intervals (each
+        interval batch is complete): empty pytree."""
         del key
-        return ()
+        if self.plan is None:
+            return ()
+        from jax.sharding import NamedSharding, PartitionSpec as P
 
-    def run_epoch(self, state: tuple, key: jax.Array,
-                  batches: IntervalBatch):
-        """``T`` interval batches in one dispatch; tick ``i`` folds ``i``
-        into ``key``, bit-matching ``T`` per-interval calls."""
-        return state, self._fn(key, batches)
+        q0 = self.plan.init_state()
+        # commit with the exact shardings the epoch fn emits, so every
+        # epoch (first included) hits one compiled executable
+        stacked = jax.tree.map(
+            lambda v: jax.device_put(
+                jnp.stack([v] * self.n_devices),
+                NamedSharding(self.mesh, P(self.axis_name))), q0)
+        tick = jax.device_put(jnp.int32(0),
+                              NamedSharding(self.mesh, P()))
+        return SpmdPipelineState(tick=tick, qstate=stacked)
+
+    def clamp_budgets(self, budgets) -> float:
+        """Applied level-0 sample budget clamped to [1, ceiling] — same
+        rule as the local pipeline; accepts a scalar or the per-level
+        list every driver passes (only level 0 exists on this path)."""
+        if budgets is None:
+            return float(self.local_budget)
+        if np.ndim(budgets) > 0:
+            budgets = np.asarray(budgets).reshape(-1)[0]
+        return min(max(float(budgets), 1.0), float(self.max_local_budget))
+
+    def _check_batches(self, batches: IntervalBatch) -> None:
+        m = batches.value.shape[-1]
+        if m % self.n_devices:
+            raise SpecError(
+                f"the interval item axis ({m} slots) must divide evenly "
+                f"across mesh axis {self.axis_name!r} ({self.n_devices} "
+                f"devices) — pad the epoch batches to a multiple of the "
+                f"axis size (padding slots carry valid=False)")
+
+    def run_epoch(self, state, key: jax.Array, batches: IntervalBatch,
+                  budgets=None):
+        """``T`` interval batches in one dispatch.
+
+        Tenant path: window ``i`` folds the global tick ``state.tick+i``
+        into ``key`` (multi-epoch runs resume bit-identically);
+        ``state`` is donated — do not reuse the argument. ``budgets``
+        (traced) moves the applied level-0 sample budget with zero
+        retraces. Returns ``(state', WindowAnswers)``.
+
+        Legacy/no-tenant paths: stateless — tick ``i`` folds ``i`` into
+        ``key``, bit-matching ``T`` per-interval calls; returns
+        ``(state, (sum, mean))``."""
+        self._check_batches(batches)
+        if self.plan is None:
+            if budgets is not None:
+                raise SpecError("budgets are traced inputs of the tenant "
+                                "query plane only — the no-tenant SPMD "
+                                "path bakes the spec's budgets statically")
+            return state, self._fn(key, batches)
+        b = jnp.float32(self.clamp_budgets(budgets))
+        state, outs = self._fn(state, key, b, batches)
+        ts, ok, se, sv, me, mv, nsel, hist, ans, bnd = outs
+        wa = WindowAnswers(
+            tick=ts, ok=ok, sum=se, sum_var=sv, mean=me, mean_var=mv,
+            n_sampled=nsel, histogram=hist, answers=ans, bounds=bnd,
+            # no raw items ever cross a boundary on this path — the
+            # would-be "forwarded items" channel is identically empty
+            n_forwarded=np.zeros((len(np.asarray(ts)), 1), np.int32))
+        return state, wa
+
+    @property
+    def summary_bytes_per_window(self) -> int:
+        """Upper bound on the per-device bytes the tenant query plane
+        ships per window: sketch summaries (quantile value/weight
+        buffers, CM tables via psum, top-k candidate keys) plus the
+        per-query CLT/histogram moment scalars and the built-in
+        workload's per-stratum reductions. Compare against
+        ``reservoir_bytes_per_window`` — the cost the reservoir
+        all-gather of the no-tenant path would pay (the README
+        bandwidth table; asserted against the traced collectives in
+        ``tests/test_spmd_query_plane.py``)."""
+        if self.plan is None:
+            return 0
+        plans = getattr(self.plan, "plans", (self.plan,))
+        n = 0
+        for p in plans:
+            for sp in p.specs:
+                if sp.kind == "quantile":
+                    n += (2 * sp.capacity + 1) * 4      # value+weight+comps
+                elif sp.kind == "heavy_hitters":
+                    n += (sp.depth * sp.width + sp.k) * 4  # CM psum + keys
+                elif sp.kind == "histogram":
+                    n += 2 * sp.bins * 4                # est + var psums
+                else:
+                    n += 3 * 4                          # est/var/share
+        x = self.spec.topology.num_strata
+        return n + (64 + 4 * x + 8) * 4  # built-in hist + moments + scalars
+
+    @property
+    def reservoir_bytes_per_window(self) -> int:
+        """What the same window costs when compacted reservoirs cross
+        instead (value f32 + stratum i32 + valid per kept item, plus the
+        W/C metadata sets) — the no-tenant path's all-gather."""
+        x = self.spec.topology.num_strata
+        return self.local_budget * (4 + 4 + 1) + 2 * x * 4

@@ -1128,3 +1128,170 @@ def spmd_local_then_root_epoch(
         lambda c, xs: (c, body(xs[0], xs[1])),
         0, (jnp.arange(t, dtype=jnp.int32), batches))
     return outs
+
+
+def spmd_query_plane_tick(
+    key: jax.Array,
+    batch: IntervalBatch,
+    qstate: tuple,
+    plan,
+    *,
+    axis_name: str,
+    budget: jnp.ndarray,
+    max_budget: int,
+    num_strata: int,
+    allocation: str = "fair",
+    sampler_backend: str = sampling.DEFAULT_BACKEND,
+    hist_bins: int = 64,
+):
+    """One window of the distributed multi-tenant query plane (§III-E +
+    the PR-3 query plane, merged by summaries).
+
+    Every device WHS-samples its local shard of the window (``budget``
+    is the TRACED applied sample budget, ``max_budget`` the static
+    ceiling sizing the partial selections), then the window is answered
+    from MERGED per-device summaries: the built-in workload (SUM/MEAN ±
+    variance, sample count, histogram) merges via ``psum`` of per-shard
+    moments, and the standing-query plan evaluates through
+    ``CompiledQueryPlan.evaluate_spmd`` — local sketch updates,
+    all-gathered O(sketch) summaries, one batched root evaluation per
+    window. NO raw reservoir items cross the device boundary (contrast
+    ``spmd_local_then_root``, which gathers the compacted reservoirs);
+    cross-device traffic per window is the sketch buffers plus a
+    handful of per-stratum scalars.
+
+    ``key`` must be replicated across the axis. Returns
+    ``(qstate', outs)`` with ``qstate'`` device-local and every leaf of
+    ``outs`` replicated (re-typed axis-invariant via ``pmean``):
+    ``(ok, sum, sum_var, mean, mean_var, n_sampled, histogram,
+    answers, bounds)``.
+    """
+    k_local = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    res = whs.whsamp(k_local, batch, budget, num_strata,
+                     allocation=allocation, backend=sampler_backend,
+                     max_reservoir=max_budget)
+    sel = res.selected
+    psum = lambda v: jax.lax.psum(v, axis_name)
+
+    y, s1, s2 = err.stratum_moments(batch.value, batch.stratum, sel,
+                                    num_strata)
+    s_loc = err.approx_sum_from_moments(y, s1, s2, res.meta)
+    m_loc = err.approx_mean_from_moments(y, s1, s2, res.meta)
+    # Mean merges share-weighted: each shard's mean estimates ITS
+    # sub-population's mean, so the union mean re-weights by the shard's
+    # estimated population Σ c_src (same rule as evaluate_spmd's "mean").
+    total_local = jnp.sum(y * res.meta.weight)
+    share = total_local / jnp.maximum(psum(total_local), 1.0)
+    se, sv = psum(s_loc.estimate), psum(s_loc.variance)
+    me = psum(m_loc.estimate * share)
+    mv = psum(m_loc.variance * share * share)
+    n_sel = psum(jnp.sum(sel.astype(jnp.int32)))
+    ok = psum(jnp.sum(batch.valid.astype(jnp.int32))) > 0
+
+    # Built-in histogram: replicated data-dependent edges (pmin/pmax of
+    # the per-shard sampled range — two scalars), then a psum of the
+    # per-bin HT estimates (linear queries merge exactly).
+    from repro.core import queries
+
+    lo = jax.lax.pmin(jnp.min(jnp.where(sel, batch.value, jnp.inf)),
+                      axis_name)
+    hi = jax.lax.pmax(jnp.max(jnp.where(sel, batch.value, -jnp.inf)),
+                      axis_name)
+    edges = jnp.linspace(lo, hi + 1e-6, hist_bins + 1)
+    hist = psum(queries.weighted_histogram(batch, res, num_strata,
+                                           edges).estimate)
+
+    if plan is None:
+        qstate2, tail = qstate, ()
+    else:
+        qstate2, answers, bounds = plan.evaluate_spmd(
+            key, batch, res, qstate, axis_name)
+        # psum/pmin outputs are already axis-invariant, but the sketch-
+        # derived answer slots descend from all_gathers, which stay
+        # vma-typed `varying`; one pmean over the (replicated-in-value)
+        # answer vectors re-types them for the shard_map out check.
+        # Exact for power-of-two meshes (N·x/N); the psum-merged slots
+        # are untouched collectives-wise — the vectors are [n_out] f32.
+        rep = lambda v: jax.lax.pmean(v, axis_name)
+        tail = (rep(answers), rep(bounds))
+    return qstate2, (ok, se, sv, me, mv, n_sel, hist) + tail
+
+
+def spmd_query_plane_epoch(
+    key: jax.Array,
+    t0: jnp.ndarray,
+    budget: jnp.ndarray,
+    batches: IntervalBatch,
+    qstate: tuple,
+    plan,
+    *,
+    axis_name: str,
+    max_budget: int,
+    num_strata: int,
+    allocation: str = "fair",
+    sampler_backend: str = sampling.DEFAULT_BACKEND,
+    hist_bins: int = 64,
+):
+    """Epoch-batched ``spmd_query_plane_tick``: ``T`` windows in one
+    ``lax.scan`` with the sketch state as the carry — one dispatch per
+    epoch, per-device sketch state never leaving the device (only its
+    per-window summaries do). Window ``i`` folds the GLOBAL tick
+    ``t0 + i`` into the epoch key, so multi-epoch runs resume
+    bit-identically to one long epoch (asserted in
+    ``tests/test_spmd_query_plane.py``). ``budget`` is the traced
+    applied level-0 budget — the closed-loop controller moves it between
+    epochs with zero retraces."""
+    t = batches.value.shape[0]
+
+    def body(carry, xs):
+        i, batch = xs
+        return spmd_query_plane_tick(
+            jax.random.fold_in(key, i), batch, carry, plan,
+            axis_name=axis_name, budget=budget, max_budget=max_budget,
+            num_strata=num_strata, allocation=allocation,
+            sampler_backend=sampler_backend, hist_bins=hist_bins)
+
+    ts = t0 + jnp.arange(t, dtype=jnp.int32)
+    qfinal, outs = jax.lax.scan(body, qstate, (ts, batches))
+    return qfinal, outs
+
+
+def spmd_srs_epoch(
+    key: jax.Array,
+    batches: IntervalBatch,
+    *,
+    axis_name: str,
+    fraction: float,
+):
+    """§IV-B coin-flip baseline on the mesh: each device keeps its shard's
+    items with probability ``fraction`` (one flat stage — the SPMD path
+    has no intermediate hops to compound through) and the HT SUM / sample
+    MEAN merge from ``psum``-ed sample moments — like the WHS query
+    plane, no item ever crosses the device boundary. Returns
+    (sum, mean) ``QueryResult``s with ``[T]``-stacked leaves, same
+    contract as ``spmd_local_then_root_epoch``."""
+    from repro.core import srs
+
+    p = jnp.float32(fraction)
+
+    def tick(i, batch):
+        k_local = jax.random.fold_in(jax.random.fold_in(key, i),
+                                     jax.lax.axis_index(axis_name))
+        sel = srs.srs_select(k_local, batch, p)
+        x = jnp.where(sel, batch.value, 0.0)
+        psum = lambda v: jax.lax.psum(v, axis_name)
+        n = psum(jnp.sum(sel.astype(jnp.float32)))
+        g1 = psum(jnp.sum(x))
+        g2 = psum(jnp.sum(x * x))
+        s = QueryResult(estimate=g1 / p, variance=g2 * (1.0 - p) / (p * p))
+        mean = g1 / jnp.maximum(n, 1.0)
+        s_sq = jnp.maximum(g2 - n * mean * mean, 0.0) / jnp.maximum(n - 1.0,
+                                                                    1.0)
+        m = QueryResult(estimate=mean, variance=s_sq / jnp.maximum(n, 1.0))
+        return s, m
+
+    t = batches.value.shape[0]
+    _, outs = jax.lax.scan(
+        lambda c, xs: (c, tick(xs[0], xs[1])),
+        0, (jnp.arange(t, dtype=jnp.int32), batches))
+    return outs

@@ -115,17 +115,6 @@ def _window_rel_error(w: dict, plan=None) -> float:
     return max(rels)
 
 
-def _tenant_rel_errors(w: dict, plan) -> dict[str, float]:
-    """Per-tenant attribution of one result row's measured error — the
-    shared ``query.compiler.tenant_rel_errors`` rule over the row's
-    answers/bounds vectors."""
-    from repro.query.compiler import tenant_rel_errors
-
-    if "answers" not in w:
-        return {}
-    return tenant_rel_errors(plan, w["answers"], w["bounds"])
-
-
 def build_tree(num_strata: int, capacity: int, fraction: float,
                fanin=(4, 2, 1), interval_ticks=None, allocation="fair",
                seed: int = 0, mode: str = "whs", engine: str = "level",
@@ -301,13 +290,8 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
         if controller is None or not new_windows:
             return
         if hasattr(controller, "last_tenant"):     # WorstTenantArbiter
-            acc: dict[str, list] = {}
-            for w in new_windows:
-                for t, r in _tenant_rel_errors(w, tree.plan).items():
-                    acc.setdefault(t, []).append(r)
-            per = {t: float(np.mean([r for r in rs if np.isfinite(r)]
-                                    or [0.0])) for t, rs in acc.items()}
-            size = controller.update(per)
+            size, per = controller.update_from_windows(tree.plan,
+                                                       new_windows)
             entry = dict(step=step, rel_error=max(per.values() or [0.0]),
                          size=size, tenant=controller.last_tenant,
                          tenant_rel_errors=per)
@@ -464,6 +448,172 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
     }
 
 
+def make_data_mesh(n_devices: int):
+    """A 1-axis ``("data",)`` mesh over ``n_devices`` local devices, with
+    an actionable error when the host doesn't expose enough (CPU runs
+    need ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    import jax
+
+    have = len(jax.devices())
+    if n_devices > have:
+        raise RuntimeError(
+            f"--mesh {n_devices} needs {n_devices} devices but jax sees "
+            f"{have}; on CPU export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
+            f"before importing jax")
+    return jax.make_mesh((n_devices,), ("data",),
+                         devices=jax.devices()[:n_devices])
+
+
+def run_spmd_pipeline(specs, *, fraction: float = 0.1, ticks: int,
+                      n_devices: int = 1, mesh=None, queries=None,
+                      seed: int = 0, mode: str = "whs",
+                      sampler_backend: str = "topk",
+                      allocation: str = "fair",
+                      epoch_ticks: int | None = None,
+                      target_rel_error: float | None = None,
+                      max_fraction: float | None = None,
+                      warmup: bool = True):
+    """The §III-E pod-scale data plane end to end: stream → mesh →
+    merged-summary query plane → per-window answers. Returns a dict in
+    the ``run_pipeline`` report style.
+
+    Every tick is ONE flat interval batch of the whole pod's arrivals,
+    sharded over the mesh axis on the item axis; ``epoch_ticks`` windows
+    batch into one jitted dispatch. With ``queries`` tenants the root
+    answers come from merged per-device sketch summaries (never raw
+    reservoirs — see ``repro.api.spmd``); ``target_rel_error`` closes
+    the §IV-B loop on the mesh: the per-epoch measured per-tenant error
+    (attributed from the merged answers) drives the shared traced sample
+    budget, worst-tenant-first when several tenants share the plane.
+    """
+    from repro import api
+
+    mesh = mesh if mesh is not None else make_data_mesh(n_devices)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    src = S.StreamSource(specs, seed=seed * 977)
+    per_tick = sum(sp.rate for sp in specs)
+    # item axis: offered load + Poisson slack, padded to shard evenly
+    width = int(1.35 * per_tick) + 256
+    width = -(-width // n_dev) * n_dev
+    if target_rel_error is not None and max_fraction is None:
+        max_fraction = 1.0
+    spec = build_spec(specs, fraction=fraction, capacity=width // n_dev,
+                      num_strata=len(specs), allocation=allocation,
+                      seed=seed, mode=mode, sampler_backend=sampler_backend,
+                      queries=queries, target_rel_error=target_rel_error,
+                      max_fraction=max_fraction)
+    pipe = api.compile(spec, mesh=mesh)
+    epoch_t = min(epoch_ticks or 32, ticks)
+    n_epochs = -(-ticks // epoch_t)
+
+    controller = None
+    trajectory: list[dict] = []
+    budget = float(pipe.local_budget)
+    if target_rel_error is not None and pipe.plan is not None:
+        from repro.runtime.budget import (BudgetConfig, BudgetController,
+                                          WorstTenantArbiter)
+
+        cfg = BudgetConfig(min_size=spec.budget.min_size,
+                           max_size=pipe.max_local_budget,
+                           target_rel_error=target_rel_error,
+                           kp=spec.budget.kp, ki=spec.budget.ki)
+        controller = (WorstTenantArbiter(cfg, initial_size=pipe.local_budget)
+                      if len(spec.tenants) > 1 else
+                      BudgetController(cfg, initial_size=pipe.local_budget))
+
+    state = pipe.init()
+    if warmup:  # compile the epoch program off the measured clock
+        v, s, c = S.StreamSource(specs, seed=seed * 977 + 1).batch(
+            epoch_t, width)
+        b = S.rows_to_interval_batch(v, s, c, len(specs))
+        state, _ = pipe.run_epoch(state, pipe.default_key, b,
+                                  budgets=[budget] if pipe.plan else None)
+        state = pipe.init()
+        pipe.trace_counter["traces"] = 0
+
+    results: list[dict] = []
+    exact_sum, exact_cnt = 0.0, 0
+    dispatches = 0
+    t0 = time.time()
+    for e in range(n_epochs):
+        v, s, c = src.batch(epoch_t, width)
+        exact_sum += float((v * (np.arange(width)[None, :]
+                                 < c[:, None])).sum())
+        exact_cnt += int(c.sum())
+        b = S.rows_to_interval_batch(v, s, c, len(specs))
+        if pipe.plan is not None:
+            # the tenant path folds the carried GLOBAL tick into the key,
+            # so one key gives fresh randomness every epoch
+            state, wa = pipe.run_epoch(state, pipe.default_key, b,
+                                       budgets=[budget])
+            rows = pipe.rows(wa)
+            if controller is not None and rows:
+                if hasattr(controller, "last_tenant"):
+                    size, per = controller.update_from_windows(pipe.plan,
+                                                               rows)
+                    entry = dict(step=e, size=size,
+                                 rel_error=max(per.values() or [0.0]),
+                                 tenant=controller.last_tenant,
+                                 tenant_rel_errors=per)
+                else:
+                    rels = [_window_rel_error(w, pipe.plan) for w in rows]
+                    rel = float(np.mean([r for r in rels
+                                         if np.isfinite(r)] or [0.0]))
+                    size = controller.update(rel_error=rel)
+                    entry = dict(step=e, size=size, rel_error=rel)
+                budget = float(size)
+                trajectory.append(entry)
+        else:
+            # stateless path folds only the epoch-local tick index:
+            # fold the epoch number here or every epoch would reuse the
+            # exact same selection randomness
+            import jax
+
+            k_e = jax.random.fold_in(pipe.default_key, e)
+            state, (sq, mq) = pipe.run_epoch(state, k_e, b)
+            rows = [dict(tick=e * epoch_t + i,
+                         sum=float(np.asarray(sq.estimate)[i]),
+                         sum_var=float(np.asarray(sq.variance)[i]),
+                         mean=float(np.asarray(mq.estimate)[i]),
+                         mean_var=float(np.asarray(mq.variance)[i]))
+                    for i in range(epoch_t)]
+        dispatches += 1
+        results.extend(rows)
+    wall = time.time() - t0
+
+    approx_sum = float(sum(r["sum"] for r in results))
+    bound = 2 * float(np.sqrt(sum(r["sum_var"] for r in results)))
+    acc_loss = abs(approx_sum - exact_sum) / max(abs(exact_sum), 1e-9)
+    out = {
+        "fraction": fraction, "mode": mode, "engine": "spmd",
+        "n_devices": n_dev, "sampler_backend": sampler_backend,
+        "dispatches": dispatches, "retraces": pipe.trace_counter["traces"],
+        "approx_sum": approx_sum, "exact_sum": exact_sum,
+        "bound_2sigma": bound, "accuracy_loss": acc_loss,
+        "within_2sigma": abs(approx_sum - exact_sum) <= bound,
+        "items_ingested": exact_cnt,
+        "wall_s": wall,
+        "throughput_items_s": exact_cnt / max(wall, 1e-9),
+        "windows": len(results),
+    }
+    if pipe.plan is not None:
+        out["query_layout"] = {
+            n: dict(offset=o, width=wd, kind=k)
+            for n, (o, wd, k) in pipe.plan.layout().items()}
+        out["windows_answers"] = [r["answers"] for r in results
+                                  if "answers" in r]
+        out["windows_bounds"] = [r["bounds"] for r in results
+                                 if "bounds" in r]
+        # the §III-E bandwidth story: what crosses the mesh per window
+        out["summary_bytes_per_window"] = pipe.summary_bytes_per_window
+        out["reservoir_bytes_per_window"] = pipe.reservoir_bytes_per_window
+    if controller is not None:
+        out["controller"] = trajectory
+        out["final_sample_sizes"] = [budget]
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dist", default="gaussian",
@@ -500,6 +650,15 @@ def main(argv=None):
     ap.add_argument("--max-fraction", type=float, default=None,
                     help="budget ceiling for the error-budget controller "
                          "(fraction of window capacity; default 1.0)")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="run the §III-E SPMD data plane on an N-device "
+                         "'data' mesh instead of the emulated tree "
+                         "(CPU: export XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N); with --queries the "
+                         "tenants lower onto the merged-summary query "
+                         "plane — only sketch summaries cross devices")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the result report to PATH (BENCH artifact)")
     args = ap.parse_args(argv)
 
     specs = {
@@ -515,23 +674,44 @@ def main(argv=None):
         from repro.query.registry import QueryRegistry
 
         registry = QueryRegistry.from_tokens(args.queries)
-    r = run_pipeline(specs, fraction=args.fraction, ticks=args.ticks,
-                     allocation=args.allocation, mode=args.mode,
-                     engine=args.engine, sampler_backend=args.backend,
-                     warmup_ticks=2, epoch_ticks=args.epoch_ticks,
-                     queries=registry, target_rel_error=args.target_rel_error,
-                     max_fraction=args.max_fraction)
-    print(f"dist={args.dist} mode={args.mode} engine={args.engine} "
-          f"backend={args.backend} fraction={r['fraction']:.0%}")
+    if args.mesh is not None:
+        r = run_spmd_pipeline(
+            specs, fraction=args.fraction, ticks=args.ticks,
+            n_devices=args.mesh, queries=registry, mode=args.mode,
+            sampler_backend=args.backend, allocation=args.allocation,
+            epoch_ticks=args.epoch_ticks,
+            target_rel_error=args.target_rel_error,
+            max_fraction=args.max_fraction)
+    else:
+        r = run_pipeline(specs, fraction=args.fraction, ticks=args.ticks,
+                         allocation=args.allocation, mode=args.mode,
+                         engine=args.engine, sampler_backend=args.backend,
+                         warmup_ticks=2, epoch_ticks=args.epoch_ticks,
+                         queries=registry,
+                         target_rel_error=args.target_rel_error,
+                         max_fraction=args.max_fraction)
+    print(f"dist={args.dist} mode={args.mode} engine={r['engine']} "
+          f"backend={args.backend} fraction={r['fraction']:.0%}"
+          + (f" mesh={r['n_devices']}dev" if args.mesh else ""))
     print(f"  SUM ≈ {r['approx_sum']:.4e} ± {r['bound_2sigma']:.2e} "
           f"(exact {r['exact_sum']:.4e}; within 2σ: {r['within_2sigma']})")
     print(f"  accuracy loss  {r['accuracy_loss']:.5%}")
-    print(f"  bandwidth kept {r['bandwidth_fraction']:.1%} of ingested items")
+    if "bandwidth_fraction" in r:
+        print(f"  bandwidth kept {r['bandwidth_fraction']:.1%} of ingested "
+              f"items")
+    elif "summary_bytes_per_window" in r:
+        # both sides per device SHIPPED per window (gather traffic scales
+        # with the mesh the same way on both paths)
+        print(f"  cross-device   {r['summary_bytes_per_window']} B/window "
+              f"of sketch summaries per device (reservoir all-gather "
+              f"would ship {r['reservoir_bytes_per_window']} B and grow "
+              f"with the sample budget)")
     print(f"  throughput     {r['throughput_items_s']:.0f} items/s "
           f"({r['items_ingested']} items, {r['windows']} windows, "
           f"{r['dispatches']} jitted dispatches)")
-    print(f"  latency        {r['latency_s'] * 1e3:.1f} ms/window "
-          f"(+{r['latency_window_ticks']:.1f} tick window wait)")
+    if "latency_s" in r:
+        print(f"  latency        {r['latency_s'] * 1e3:.1f} ms/window "
+              f"(+{r['latency_window_ticks']:.1f} tick window wait)")
     if registry is not None and r.get("windows_answers"):
         last_a, last_b = r["windows_answers"][-1], r["windows_bounds"][-1]
         print("  standing queries (last window, ± bound):")
@@ -547,6 +727,15 @@ def main(argv=None):
               f"{tr[-1]['size']} over {len(tr)} updates "
               f"(rel err {tr[0]['rel_error']:.4f}→{tr[-1]['rel_error']:.4f},"
               f" target {args.target_rel_error})")
+    if args.json:
+        import json
+        import pathlib
+
+        payload = {k: v for k, v in r.items()
+                   if k not in ("windows_answers", "windows_bounds")}
+        pathlib.Path(args.json).write_text(
+            json.dumps(payload, indent=1, default=str))
+        print(f"  wrote {args.json}")
     return r
 
 

@@ -69,6 +69,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-len", type=int, default=16)
     ap.add_argument("--telemetry-fraction", type=float, default=0.25)
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="run the telemetry plane on an N-device 'data' "
+                         "mesh (repro.api.compile(spec, mesh=...)): each "
+                         "device samples its shard of every batch's "
+                         "records and the dashboard tenant answers from "
+                         "merged sketch summaries — no raw records cross "
+                         "devices. CPU: export XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N")
     args = ap.parse_args(argv)
 
     cfg = registry.get_config(args.arch)
@@ -114,16 +122,33 @@ def main(argv=None):
     # Each serving batch is one tick into the 2→1 hierarchy; the compiled
     # pipeline samples at every hop and the dashboard tenant's standing
     # queries are answered at the root each window — one fused dispatch
-    # for the whole epoch.
+    # for the whole epoch. With --mesh the SAME spec lowers onto the
+    # §III-E SPMD data plane instead: every device samples its shard of
+    # each batch's records and the dashboard tenant answers from MERGED
+    # sketch summaries — no raw record crosses a device boundary.
     capacity = max(64, args.batch)
-    pipe = api.compile(telemetry_spec(capacity, args.telemetry_fraction))
-    state = pipe.init()
-    batch = S.ticks_to_ingest(tick_records, n_nodes=EDGE_NODES,
-                              width=capacity)
-    state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
-                               batch.strata, batch.counts)
+    m = sum(len(v) for v, _ in tick_records)
+    if args.mesh:
+        from repro.launch.analytics import make_data_mesh
+
+        pipe = api.compile(telemetry_spec(capacity, args.telemetry_fraction),
+                           mesh=make_data_mesh(args.mesh))
+        flat = S.ticks_to_ingest(tick_records, n_nodes=1, width=capacity)
+        width = -(-capacity // args.mesh) * args.mesh
+        batches = S.rows_to_interval_batch(
+            flat.values[:, 0], flat.strata[:, 0], flat.counts[:, 0],
+            NUM_CLASSES, width=width)
+        state = pipe.init()
+        state, wa = pipe.run_epoch(state, pipe.default_key, batches)
+    else:
+        pipe = api.compile(telemetry_spec(capacity,
+                                          args.telemetry_fraction))
+        state = pipe.init()
+        batch = S.ticks_to_ingest(tick_records, n_nodes=EDGE_NODES,
+                                  width=capacity)
+        state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
+                                   batch.strata, batch.counts)
     rows = pipe.rows(wa)
-    m = batch.exact_count
     a = lambda name, row: pipe.answer(row["answers"], name,
                                       tenant="dashboard")
     bnd = lambda name, row: pipe.answer(row["bounds"], name,
@@ -141,9 +166,11 @@ def main(argv=None):
     exact_all = np.concatenate([v for v, _ in tick_records])
     exact_mean = float(exact_all.mean())
     n_kept = int(sum(r["n_sampled"] for r in rows))
+    plane = (f"{args.mesh}-device SPMD mesh (merged sketch summaries)"
+             if args.mesh else f"{EDGE_NODES}→1 hierarchy")
     print(f"served {m} requests in {wall:.1f}s")
     print(f"telemetry plane: {len(rows)} windows through the "
-          f"{EDGE_NODES}→1 hierarchy, {pipe.plan.k} standing queries, "
+          f"{plane}, {pipe.plan.k} standing queries, "
           f"1 fused dispatch, {n_kept}/{m} records at the root")
     print(f"  QPS              ≈ {n_est / max(wall, 1e-9):.2f}")
     print(f"  total latency-ms ≈ {total_est:.1f} "

@@ -222,3 +222,26 @@ def spmd_epoch_specs(axis_name: str = "data"):
                                    StratumMeta(P(), P())))
     out_specs = (P(), P())
     return in_specs, out_specs
+
+
+def spmd_query_epoch_specs(axis_name: str, qstate):
+    """Sketch-aware ``shard_map`` spec components for the SPMD query
+    plane (``repro.api.spmd`` tenant lowering).
+
+    Per-device sketch state leaves carry a leading device axis sharded
+    over ``axis_name`` (each device owns exactly its own quantile
+    buffers / CM tables / top-k slots — they all-gather as O(sketch)
+    summaries at the window boundary, never as items); epoch batches
+    stay item-sharded on their trailing axis; everything the root
+    returns (per-window answers, bounds, built-in workload) is
+    replicated. Returns ``dict(qstate=..., batches=..., replicated=P())``
+    — components, because the caller owns the state/output pytree
+    structure they assemble into."""
+    from repro.core.types import IntervalBatch, StratumMeta
+
+    item = P(None, axis_name)
+    return dict(
+        qstate=jax.tree.map(lambda _: P(axis_name), qstate),
+        batches=IntervalBatch(item, item, item, StratumMeta(P(), P())),
+        replicated=P(),
+    )

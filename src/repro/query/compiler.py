@@ -36,6 +36,8 @@ from repro.query.registry import QuerySpec
 
 # fold_in tag separating the query plane's PRNG stream from the sampler's
 _QUERY_KEY_TAG = 0x51C7
+# fold_in tag for the replicated cross-device merge randomness (SPMD path)
+_MERGE_KEY_TAG = 0x4D52
 
 
 class CompiledQueryPlan:
@@ -120,6 +122,103 @@ class CompiledQueryPlan:
                 st2 = sketches.hh_update(st, keys, w_item)
                 eps_w = sketches.hh_error_bound(sp.width, st2.total_weight)
                 a = jnp.concatenate([st2.key.astype(jnp.float32), st2.est])
+                b = jnp.concatenate([jnp.zeros((sp.k,), jnp.float32),
+                                     jnp.full((sp.k,), 1.0) * eps_w])
+            else:  # pragma: no cover — registry validates kinds
+                raise AssertionError(sp.kind)
+            outs.append(a.astype(jnp.float32))
+            bnds.append(b.astype(jnp.float32))
+            new_state.append(st2)
+        return tuple(new_state), jnp.concatenate(outs), jnp.concatenate(bnds)
+
+    # ------------------------------------------------------------- spmd --
+    def evaluate_spmd(self, key: jax.Array, batch: IntervalBatch,
+                      res: SampleResult, state: tuple,
+                      axis_name: str) -> tuple:
+        """Distributed ``evaluate`` under ``shard_map``: every device
+        holds one shard of the window (``batch``/``res`` are its local
+        sample) plus its own sketch ``state``; the answers come from
+        MERGED per-device summaries, and only those summaries —
+        O(sketch) bytes — cross the device boundary:
+
+        * CLT queries: per-device (estimate, variance) from the local
+          moments pass, ``psum``-merged (independent local samples sum
+          in estimate and variance; the mean re-weights by each shard's
+          population share). ``count`` merges the *pre-sampling* stratum
+          counts ``Σ C_i·W^in_i`` — the same quantity the HT count
+          reconstructs, but summed as exact integers, so the merged
+          answer is bitwise-identical across device counts.
+        * histograms: per-bin HT estimate/variance, ``psum``-merged
+          (linear queries merge exactly).
+        * sketches: the local state updates from the local sample (own
+          PRNG side-branch per device), then the per-device summaries
+          all-gather and merge in-graph (``quantile_merge_stacked`` /
+          ``hh_merge_stacked``) with REPLICATED merge randomness, so
+          every device answers from the identical merged summary.
+
+        ``key`` must be replicated across ``axis_name``. Returns
+        ``(state', answers, bounds)`` with ``state'`` device-local and
+        answers/bounds replicated in value (the caller re-types them
+        with a ``pmean``, see ``core.tree.spmd_query_plane_tick``)."""
+        x = self.num_strata
+        sel = res.selected
+        w_item = res.meta.weight[batch.stratum] * sel.astype(jnp.float32)
+        y, s1, s2 = err.stratum_moments(batch.value, batch.stratum, sel, x)
+        psum = lambda v: jax.lax.psum(v, axis_name)
+        dev = jax.lax.axis_index(axis_name)
+        # Each shard's estimated source population (Σ c_src) — the mean's
+        # merge weight: MEAN over the union is the share-weighted mean.
+        total_local = jnp.sum(y * res.meta.weight)
+        total = jnp.maximum(psum(total_local), 1.0)
+        share = total_local / total
+
+        outs, bnds, new_state = [], [], []
+        for i, sp in enumerate(self.specs):
+            kq = jax.random.fold_in(jax.random.fold_in(key, _QUERY_KEY_TAG), i)
+            kq_local = jax.random.fold_in(kq, dev)
+            kq_merge = jax.random.fold_in(kq, _MERGE_KEY_TAG)
+            st = state[i]
+            if sp.kind == "sum":
+                q = err.approx_sum_from_moments(y, s1, s2, res.meta)
+                a = psum(q.estimate)[None]
+                b, st2 = 2.0 * jnp.sqrt(psum(q.variance))[None], ()
+            elif sp.kind == "count":
+                # Exact by construction: C_i·W^in_i needs no sample, and
+                # integer f32 sums are associative — N-device ≡ 1-device
+                # to the bit (the harness' "exact queries" property).
+                a = psum(jnp.sum(res.c * batch.meta.weight))[None]
+                b, st2 = jnp.zeros((1,), jnp.float32), ()
+            elif sp.kind == "mean":
+                q = err.approx_mean_from_moments(y, s1, s2, res.meta)
+                a = psum(q.estimate * share)[None]
+                b = 2.0 * jnp.sqrt(psum(q.variance * share * share))[None]
+                st2 = ()
+            elif sp.kind == "histogram":
+                from repro.core import queries as Q
+
+                edges = jnp.linspace(sp.lo, sp.hi, sp.bins + 1)
+                q = Q.weighted_histogram(batch, res, x, edges)
+                a = psum(q.estimate)
+                b, st2 = 2.0 * jnp.sqrt(psum(q.variance)), ()
+            elif sp.kind == "quantile":
+                st2 = sketches.quantile_update(kq_local, st, batch.value,
+                                               w_item)
+                g = jax.tree.map(lambda v: jax.lax.all_gather(v, axis_name),
+                                 st2)
+                merged = sketches.quantile_merge_stacked(kq_merge, g)
+                a = sketches.quantile_query(merged, jnp.asarray(sp.qs))
+                b = jnp.full((len(sp.qs),), 1.0) * merged.rank_error_bound
+            elif sp.kind == "heavy_hitters":
+                keys = sketches.hh_item_key(batch.value)
+                st2 = sketches.hh_update(st, keys, w_item)
+                # counts are linear: psum ≡ gather-then-sum, at 1/N the
+                # gather bytes; only the k-slot candidate keys gather.
+                g_counts = jax.lax.psum(st2.counts, axis_name)
+                g_keys = jax.lax.all_gather(st2.key, axis_name, tiled=True)
+                mk, me = sketches._refresh_topk(g_counts, g_keys, sp.k)
+                eps_w = sketches.hh_error_bound(sp.width,
+                                                jnp.sum(g_counts[0]))
+                a = jnp.concatenate([mk.astype(jnp.float32), me])
                 b = jnp.concatenate([jnp.zeros((sp.k,), jnp.float32),
                                      jnp.full((sp.k,), 1.0) * eps_w])
             else:  # pragma: no cover — registry validates kinds
@@ -254,6 +353,22 @@ class MultiTenantPlan:
         states, outs, bnds = [], [], []
         for plan, st in zip(self.plans, state):
             st2, a, b = plan.evaluate(key, batch, res, st)
+            states.append(st2)
+            outs.append(a)
+            bnds.append(b)
+        return (tuple(states), jnp.concatenate(outs), jnp.concatenate(bnds))
+
+    def evaluate_spmd(self, key: jax.Array, batch: IntervalBatch,
+                      res: SampleResult, state: tuple,
+                      axis_name: str) -> tuple:
+        """Distributed fused evaluation for all tenants (one batched root
+        over the merged summaries — see ``CompiledQueryPlan.
+        evaluate_spmd``). Every tenant plan gets the SAME replicated key,
+        mirroring the local ``evaluate``, so each tenant's merged answers
+        match an isolated single-tenant SPMD run of its registry."""
+        states, outs, bnds = [], [], []
+        for plan, st in zip(self.plans, state):
+            st2, a, b = plan.evaluate_spmd(key, batch, res, st, axis_name)
             states.append(st2)
             outs.append(a)
             bnds.append(b)

@@ -24,6 +24,19 @@ re-estimate all candidates (old top-k ∪ batch keys) against the fresh
 counts, dedupe, and keep the best ``k``. Estimates only over-count
 (collisions), by at most ``(2/width)·W`` per the standard CM bound.
 
+Merge algebra (the §III-E distributed query plane rests on this): both
+sketches close under ``merge`` — ``quantile_merge`` folds one summary's
+weighted buffer into another (one compaction when over capacity, both
+histories' compaction counts ride along in the bound), and ``hh_merge``
+adds the linear CM tables and re-merges the top-k candidate union
+against the merged counts. The ``*_stacked`` variants take a leading
+stack axis (exactly what ``jax.lax.all_gather`` of per-device state
+produces under ``shard_map``) and merge N summaries with ONE compaction
+/ one candidate refresh, so the pod-scale path ships O(sketch) bytes
+per window — never a reservoir. Properties (associativity/commutativity
+up to answer equivalence, identity, merge ≡ concatenated stream) are
+pinned in ``tests/test_sketch_merge.py``.
+
 Heavy inner passes route through ``kernels.sketch_update.ops`` (Pallas
 on TPU, jnp oracle elsewhere).
 """
@@ -141,6 +154,37 @@ def quantile_query(sk: QuantileSketch, qs: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(total > 0.0, out, 0.0)
 
 
+def quantile_merge(key: jax.Array, a: QuantileSketch, b: QuantileSketch,
+                   *, impl: str = "auto") -> QuantileSketch:
+    """Merge two summaries into one of ``a``'s capacity.
+
+    Folding ``b``'s weighted buffer into ``a`` is the same operation as
+    folding a batch in (mergeability by construction); ``b``'s compaction
+    history is added so the merged ``rank_error_bound`` stays honest
+    (rank errors of the two histories random-walk independently — summing
+    the counts upper-bounds the merged variance)."""
+    out = quantile_update(key, a._replace(compactions=a.compactions
+                                          + b.compactions),
+                          b.value, b.weight, impl=impl)
+    return out
+
+
+def quantile_merge_stacked(key: jax.Array, stacked: QuantileSketch,
+                           *, impl: str = "auto") -> QuantileSketch:
+    """Merge ``N`` stacked summaries (leaves ``[N, ...]`` — the layout an
+    ``all_gather`` of per-device state produces) with ONE compaction.
+
+    Equivalent to a left fold of :func:`quantile_merge` up to answer
+    equivalence, but the single compaction adds one rank perturbation
+    instead of ``N − 1``, so the merged bound is tighter."""
+    cap = stacked.value.shape[-1]
+    base = QuantileSketch(value=jnp.zeros((cap,), jnp.float32),
+                          weight=jnp.zeros((cap,), jnp.float32),
+                          compactions=jnp.sum(stacked.compactions))
+    return quantile_update(key, base, stacked.value.reshape(-1),
+                           stacked.weight.reshape(-1), impl=impl)
+
+
 # ---------------------------------------------------------- heavy hitters --
 class HeavyHitterSketch(NamedTuple):
     """``counts`` f32[depth, width] weighted count-min state;
@@ -184,6 +228,28 @@ def hh_point_estimate(sk: HeavyHitterSketch, keys: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(per_row, axis=0)
 
 
+def _refresh_topk(counts: jnp.ndarray, cand_key: jnp.ndarray,
+                  k_slots: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Re-estimate a candidate-key pool against a CM table and keep the
+    best ``k_slots``: dedupe by sorting (duplicates share one CM
+    estimate, so which survives is irrelevant), then top-k by estimate.
+    Shared by the batch update and the merge paths — the "top-k
+    re-merge" is exactly a refresh over the union of candidate sets."""
+    fresh = HeavyHitterSketch(counts=counts,
+                              key=jnp.zeros((0,), jnp.int32),
+                              est=jnp.zeros((0,), jnp.float32))
+    cand_est = jnp.where(cand_key == HH_EMPTY_KEY, -1.0,
+                         hh_point_estimate(fresh, cand_key))
+    order = jnp.argsort(cand_key)
+    ks, es = cand_key[order], cand_est[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+    score = jnp.where(first & (ks != HH_EMPTY_KEY), es, -1.0)
+    top_est, top_ix = jax.lax.top_k(score, k_slots)
+    occupied = top_est >= 0.0
+    return (jnp.where(occupied, ks[top_ix], HH_EMPTY_KEY),
+            jnp.maximum(top_est, 0.0))
+
+
 def hh_update(sk: HeavyHitterSketch, keys: jnp.ndarray,
               weights: jnp.ndarray, *, impl: str = "auto"
               ) -> HeavyHitterSketch:
@@ -193,25 +259,31 @@ def hh_update(sk: HeavyHitterSketch, keys: jnp.ndarray,
     delta = sk_ops.cms_update(keys.astype(jnp.uint32), w, sk.depth, sk.width,
                               impl=impl)
     counts = sk.counts + delta
-    fresh = sk._replace(counts=counts)
-
     cand_key = jnp.concatenate(
         [sk.key, jnp.where(w > 0.0, keys, HH_EMPTY_KEY)])
-    cand_est = jnp.where(cand_key == HH_EMPTY_KEY, -1.0,
-                         hh_point_estimate(fresh, cand_key))
-    # Dedupe: sort by key, keep first occurrence (duplicates share one
-    # CM estimate, so which survives is irrelevant), then top-k by est.
-    order = jnp.argsort(cand_key)
-    ks, es = cand_key[order], cand_est[order]
-    first = jnp.concatenate([jnp.ones((1,), bool), ks[1:] != ks[:-1]])
-    score = jnp.where(first & (ks != HH_EMPTY_KEY), es, -1.0)
-    top_est, top_ix = jax.lax.top_k(score, k_slots)
-    occupied = top_est >= 0.0
-    return HeavyHitterSketch(
-        counts=counts,
-        key=jnp.where(occupied, ks[top_ix], HH_EMPTY_KEY),
-        est=jnp.maximum(top_est, 0.0),
-    )
+    key_out, est_out = _refresh_topk(counts, cand_key, k_slots)
+    return HeavyHitterSketch(counts=counts, key=key_out, est=est_out)
+
+
+def hh_merge(a: HeavyHitterSketch, b: HeavyHitterSketch) -> HeavyHitterSketch:
+    """Merge two sketches: CM tables are linear (counts add exactly —
+    the merged table equals one table fed the concatenated stream), and
+    the top-k re-merges as a candidate refresh over both key sets
+    against the merged counts."""
+    counts = a.counts + b.counts
+    cand_key = jnp.concatenate([a.key, b.key])
+    key_out, est_out = _refresh_topk(counts, cand_key, a.key.shape[0])
+    return HeavyHitterSketch(counts=counts, key=key_out, est=est_out)
+
+
+def hh_merge_stacked(stacked: HeavyHitterSketch) -> HeavyHitterSketch:
+    """Merge ``N`` stacked sketches (leaves ``[N, ...]``, e.g. from an
+    ``all_gather`` of per-device state) with one candidate refresh."""
+    counts = jnp.sum(stacked.counts, axis=0)
+    cand_key = stacked.key.reshape(-1)
+    key_out, est_out = _refresh_topk(counts, cand_key,
+                                     stacked.key.shape[-1])
+    return HeavyHitterSketch(counts=counts, key=key_out, est=est_out)
 
 
 def hh_item_key(values: jnp.ndarray) -> jnp.ndarray:

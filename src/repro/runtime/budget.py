@@ -78,3 +78,39 @@ class WorstTenantArbiter:
         worst = max(finite, key=lambda t: finite[t])
         self.last_tenant = worst
         return self.controller.update(rel_error=finite[worst])
+
+    def update_from_windows(self, plan, windows) -> tuple[int, dict]:
+        """One epoch's result rows → (new budget, per-tenant errors).
+
+        Convenience over :func:`aggregate_tenant_rel_errors` +
+        :meth:`update` — what both the local scan driver and the SPMD
+        mesh driver call at each epoch boundary, so the closed loop
+        behaves identically whether the error was attributed from a
+        single tree's root or from the mesh's merged summaries."""
+        per = aggregate_tenant_rel_errors(plan, windows)
+        return self.update(per), per
+
+
+def aggregate_tenant_rel_errors(plan, windows) -> dict[str, float]:
+    """Aggregate per-tenant measured relative ±2σ errors over an epoch.
+
+    ``windows`` are result rows carrying flat ``answers``/``bounds``
+    vectors (``HostTree.results`` / ``CompiledPipeline.rows`` /
+    ``CompiledSpmdPipeline.rows`` layout — the SPMD rows attribute from
+    MERGED summaries, so the arbiter sees pod-wide per-tenant error).
+    Per window the attribution rule is ``query.compiler.
+    tenant_rel_errors`` (worst CLT bound per tenant); across the epoch
+    each tenant reports the mean of its finite per-window errors."""
+    import numpy as np
+
+    from repro.query.compiler import tenant_rel_errors
+
+    acc: dict[str, list] = {}
+    for w in windows:
+        if "answers" not in w:
+            continue
+        for t, r in tenant_rel_errors(plan, w["answers"],
+                                      w["bounds"]).items():
+            acc.setdefault(t, []).append(r)
+    return {t: float(np.mean([r for r in rs if np.isfinite(r)] or [0.0]))
+            for t, rs in acc.items()}

@@ -406,11 +406,17 @@ def test_compile_with_mesh_matches_spmd_epoch():
         assert float(m1.estimate) == float(m_t.estimate[i])
 
 
-def test_compile_with_mesh_rejects_unsupported_specs():
+def test_compile_with_mesh_accepts_tenants_and_srs():
+    """The PR-5 lowering: tenant specs and the srs baseline now compile
+    onto the mesh (formerly SpecError rejections); genuinely unsupported
+    shapes keep actionable errors."""
     mesh = jax.make_mesh((1,), ("data",))
-    with pytest.raises(SpecError, match="weighted hierarchical"):
-        api.compile(_spec(mode="srs"), mesh=mesh)
-    with pytest.raises(SpecError, match="tenants"):
-        api.compile(_spec(tenants=(_reg_a().as_tenant("a"),)), mesh=mesh)
     with pytest.raises(SpecError, match="no axis"):
         api.compile(_spec(), mesh=mesh, axis_name="model")
+    srs = api.compile(_spec(mode="srs"), mesh=mesh)
+    assert srs.plan is None and srs.init() == ()
+    tenanted = api.compile(_spec(tenants=(_reg_a().as_tenant("a"),)),
+                           mesh=mesh)
+    assert tenanted.plan is not None
+    assert tenanted.tenant_names == ("a",)
+    assert int(tenanted.init().tick) == 0

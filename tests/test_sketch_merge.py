@@ -1,0 +1,223 @@
+"""Sketch merge algebra — the property set the SPMD query plane rests on.
+
+``merge`` must behave like a commutative monoid up to answer
+equivalence: associative and commutative (answers agree within the
+summaries' published rank bounds), ``merge(empty, s) ≡ s``, and a merge
+of split-stream summaries must answer like one summary fed the
+concatenated stream — exactly for the linear sketches (CM counts,
+stratum moments), within the rank bound for the quantile compactor.
+"""
+
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # Deterministic fallback so the algebra stays pinned on hosts
+    # without hypothesis (CI installs it and gets the full search).
+    class _Ints:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+    class st:  # noqa: N801 — mirrors the hypothesis module name
+        integers = staticmethod(lambda lo, hi: _Ints(lo, hi))
+
+    def settings(**kw):
+        return lambda f: f
+
+    def given(*strats):
+        def deco(f):
+            def wrapper():
+                rng = np.random.default_rng(0xA5)
+                for _ in range(8):
+                    f(*(int(rng.integers(s.lo, s.hi + 1)) for s in strats))
+            # plain rename (not functools.wraps: pytest would introspect
+            # the wrapped signature and demand fixtures for its params)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco
+
+from repro.core import error as err
+from repro.query import sketches as sk
+
+CAP = 64
+
+
+def _qsketch(key, data, cap=CAP):
+    b = jnp.asarray(data, jnp.float32)
+    return sk.quantile_update(key, sk.quantile_init(cap), b,
+                              jnp.ones_like(b))
+
+
+def _stream(seed: int, n: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    # integer-valued f32 so linear aggregates are exact under any
+    # summation grouping (the "exact for moments" property is about the
+    # algebra, not f32 rounding)
+    return np.round(rng.normal(100, 25, n)).astype(np.float32)
+
+
+def _ranks(data: np.ndarray, values: np.ndarray) -> np.ndarray:
+    return np.asarray([(data <= v).mean() for v in np.asarray(values)])
+
+
+QS = jnp.asarray([0.1, 0.25, 0.5, 0.75, 0.9])
+
+
+# ------------------------------------------------------------- quantile --
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000))
+def test_quantile_merge_associative_commutative(seed):
+    """(a⊕b)⊕c, a⊕(b⊕c), (b⊕a)⊕c all answer the union stream within
+    their own published rank bounds — merge order is immaterial up to
+    answer equivalence."""
+    data = _stream(seed, 900)
+    parts = np.split(data, 3)
+    key = jax.random.PRNGKey(seed)
+    ks = [jax.random.fold_in(key, i) for i in range(8)]
+    a, b, c = (_qsketch(k, p) for k, p in zip(ks, parts))
+    m1 = sk.quantile_merge(ks[3], sk.quantile_merge(ks[4], a, b), c)
+    m2 = sk.quantile_merge(ks[5], a, sk.quantile_merge(ks[6], b, c))
+    m3 = sk.quantile_merge(ks[3], sk.quantile_merge(ks[4], b, a), c)
+    for m in (m1, m2, m3):
+        np.testing.assert_allclose(float(m.total_weight), len(data),
+                                   rtol=1e-6)
+        bound = float(m.rank_error_bound) + 1.0 / CAP
+        got = _ranks(data, sk.quantile_query(m, QS))
+        assert np.all(np.abs(got - np.asarray(QS)) <= bound), (got, bound)
+    # same merge randomness ⇒ the commuted merge is answer-identical
+    np.testing.assert_array_equal(np.asarray(sk.quantile_query(m1, QS)),
+                                  np.asarray(sk.quantile_query(m3, QS)))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000))
+def test_quantile_merge_empty_is_identity(seed):
+    data = _stream(seed, 200)
+    s = _qsketch(jax.random.PRNGKey(seed), data)
+    for m in (sk.quantile_merge(jax.random.PRNGKey(1), s,
+                                sk.quantile_init(CAP)),
+              sk.quantile_merge(jax.random.PRNGKey(2),
+                                sk.quantile_init(CAP), s)):
+        np.testing.assert_allclose(float(m.total_weight),
+                                   float(s.total_weight), rtol=1e-6)
+        assert float(m.compactions) == float(s.compactions)
+        np.testing.assert_array_equal(
+            np.asarray(sk.quantile_query(m, QS)),
+            np.asarray(sk.quantile_query(s, QS)))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_quantile_merged_answers_match_concatenated_stream(seed, n_parts):
+    """N split-stream summaries merged (one compaction — the stacked
+    merge the SPMD all-gather path uses) answer the concatenated stream
+    within the merged summary's published rank bound."""
+    data = _stream(seed, 240 * n_parts)
+    key = jax.random.PRNGKey(seed)
+    parts = [_qsketch(jax.random.fold_in(key, i), p)
+             for i, p in enumerate(np.split(data, n_parts))]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+    m = sk.quantile_merge_stacked(jax.random.fold_in(key, 99), stacked)
+    np.testing.assert_allclose(float(m.total_weight), len(data), rtol=1e-6)
+    bound = float(m.rank_error_bound) + 1.0 / CAP
+    got = _ranks(data, sk.quantile_query(m, QS))
+    assert np.all(np.abs(got - np.asarray(QS)) <= bound), (got, bound)
+
+
+# -------------------------------------------------------- heavy hitters --
+def _hh_stream(seed: int, n: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.choice(np.array([7, 13, 29, 101, 555], np.int32),
+                      p=[0.45, 0.3, 0.15, 0.07, 0.03], size=n)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000))
+def test_hh_merge_counts_exact_vs_concatenated(seed):
+    """CM tables are linear: any split/merge grouping produces the
+    bitwise-identical table (and therefore identical point estimates)
+    as one sketch fed the concatenated stream."""
+    keys = _hh_stream(seed, 3000)
+    ones = lambda k: jnp.ones((len(k),), jnp.float32)
+    parts = np.split(keys, 3)
+    hs = [sk.hh_update(sk.hh_init(4, 256, 3), jnp.asarray(p), ones(p))
+          for p in parts]
+    whole = sk.hh_update(sk.hh_init(4, 256, 3), jnp.asarray(keys),
+                         ones(keys))
+    m1 = sk.hh_merge(sk.hh_merge(hs[0], hs[1]), hs[2])
+    m2 = sk.hh_merge(hs[2], sk.hh_merge(hs[1], hs[0]))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *hs)
+    m3 = sk.hh_merge_stacked(stacked)
+    probe = jnp.asarray([7, 13, 29, 101, 555, 999], jnp.int32)
+    for m in (m1, m2, m3):
+        np.testing.assert_array_equal(np.asarray(m.counts),
+                                      np.asarray(whole.counts))
+        np.testing.assert_array_equal(
+            np.asarray(sk.hh_point_estimate(m, probe)),
+            np.asarray(sk.hh_point_estimate(whole, probe)))
+    # identical merged counts ⇒ the top-k refresh ranks candidates
+    # identically: merge order cannot change the surviving key set
+    assert (set(np.asarray(m1.key).tolist())
+            == set(np.asarray(m2.key).tolist())
+            == set(np.asarray(m3.key).tolist()))
+
+
+def test_hh_merge_empty_is_identity():
+    keys = _hh_stream(3, 2000)
+    s = sk.hh_update(sk.hh_init(4, 256, 3), jnp.asarray(keys),
+                     jnp.ones((len(keys),), jnp.float32))
+    empty = sk.hh_init(4, 256, 3)
+    for m in (sk.hh_merge(s, empty), sk.hh_merge(empty, s)):
+        np.testing.assert_array_equal(np.asarray(m.counts),
+                                      np.asarray(s.counts))
+        assert (set(np.asarray(m.key).tolist())
+                == set(np.asarray(s.key).tolist()))
+        np.testing.assert_array_equal(np.sort(np.asarray(m.est)),
+                                      np.sort(np.asarray(s.est)))
+
+
+def test_hh_merge_recovers_split_heavy_hitters():
+    """A key that is heavy only in the union (spread across workers so
+    no single worker tracks it top-1) survives the top-k re-merge —
+    the property a naive 'take the union of local top-1s' would lose."""
+    a = np.concatenate([np.full(60, 7), np.full(50, 13), np.full(45, 29)])
+    b = np.concatenate([np.full(60, 101), np.full(50, 13), np.full(45, 29)])
+    ones = lambda n: jnp.ones((n,), jnp.float32)
+    ha = sk.hh_update(sk.hh_init(2, 256, 3), jnp.asarray(a, jnp.int32),
+                      ones(len(a)))
+    hb = sk.hh_update(sk.hh_init(2, 256, 3), jnp.asarray(b, jnp.int32),
+                      ones(len(b)))
+    m = sk.hh_merge(ha, hb)
+    got = set(np.asarray(m.key).tolist())
+    # 13 (100 total) out-counts both locally-top keys 7 and 101 (60 each)
+    assert 13 in got, got
+
+
+# --------------------------------------------------------------- moments --
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8))
+def test_stratum_moments_merge_exact(seed, n_parts):
+    """The CLT moment accumulators the SPMD path psum-merges are plain
+    sums: split-stream moments added in any grouping equal the
+    concatenated-stream moments exactly (integer-valued f32)."""
+    n = 128 * n_parts
+    # small integer values: Σx² stays below 2^24, so f32 sums are exact
+    data = np.round(np.random.default_rng(seed).normal(10, 3, n)
+                    ).astype(np.float32)
+    strata = (np.arange(n) % 3).astype(np.int32)
+    sel = np.ones((n,), bool)
+    whole = err.stratum_moments(jnp.asarray(data), jnp.asarray(strata),
+                                jnp.asarray(sel), 3)
+    acc = [np.zeros(3, np.float32)] * 3
+    for dpart, spart in zip(np.split(data, n_parts),
+                            np.split(strata, n_parts)):
+        part = err.stratum_moments(jnp.asarray(dpart), jnp.asarray(spart),
+                                   jnp.ones((len(dpart),), bool), 3)
+        acc = [a + np.asarray(p) for a, p in zip(acc, part[:3])]
+    for a, w in zip(acc, whole):
+        np.testing.assert_array_equal(a, np.asarray(w))
