@@ -56,7 +56,10 @@ def k8_registry() -> QueryRegistry:
             .register_histogram("hist_fine", 0.0, 2_000.0, 32)
             .register_quantile("quantiles", QUANTILES,
                                capacity=SKETCH_CAPACITY)
-            .register_quantile("median", (0.5,), capacity=64)
+            # capacity must clear the leveled sketch's rank-error floor
+            # for TARGET_REL_ERROR (spec-time feasibility check): 256
+            # floors at ~0.015 < 0.02; 64 floors at ~0.058.
+            .register_quantile("median", (0.5,), capacity=SKETCH_CAPACITY)
             .register_heavy_hitters("heavy", k=8, width=1024, depth=4))
 
 

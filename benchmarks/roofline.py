@@ -36,6 +36,21 @@ def run() -> list[dict]:
             "model/hlo": d.get("model_vs_hlo"),
         })
     rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    # Analytic cell for the fused sampling tick (no dry-run artifact —
+    # the kernel is hand-modelled in kernels_micro.fused_tick_model):
+    # percent-of-roofline for the single-kernel WHS tick on v5e.
+    from benchmarks.kernels_micro import fused_tick_model
+
+    m = fused_tick_model(1024, 8, 1024)
+    rows.append({
+        "arch": "v5e-model", "shape": "fused_tick C=1024 X=8", "mesh": "-",
+        "compute_s": m["fused_step_us_v5e"] * 1e-6
+        * m["fused_roofline_compute_frac"],
+        "memory_s": m["fused_step_us_v5e"] * 1e-6,
+        "collective_s": 0.0, "dominant": m["fused_dominant"],
+        "roofline_frac": m["fused_roofline_compute_frac"],
+        "model/hlo": None,
+    })
     common.table("Roofline terms from dry-run artifacts", rows)
     if skipped:
         print(f"skipped (per DESIGN.md §6): {len(skipped)}")

@@ -37,7 +37,7 @@ class SpecError(ValueError):
 
 
 _MODES = ("whs", "srs")
-_BACKENDS = ("argsort", "topk", "pallas")
+_BACKENDS = ("argsort", "topk", "pallas", "pallas_fused")
 _ALLOCATIONS = ("fair", "proportional")
 
 
@@ -444,3 +444,24 @@ def validate(spec: PipelineSpec) -> None:
                         f" (derived from the level-{lvl - 1} ceiling × "
                         f"fan-in) — lower budget.sample_sizes[{lvl}] or "
                         f"raise the downstream ceilings"))
+    # Error-budget feasibility: the controller grows SAMPLE budgets, but a
+    # quantile sketch's rank-error floor is set by its CAPACITY (the leveled
+    # compaction schedule) — no sample budget can push the published bound
+    # below it. A target under that floor would pin the controller at its
+    # ceiling forever, so reject it at spec time.
+    if budget.target_rel_error is not None:
+        from repro.query.sketches import quantile_rank_error_bound
+
+        target = float(budget.target_rel_error)
+        for t in spec.tenants:
+            for q in t.queries:
+                if q.kind != "quantile":
+                    continue
+                floor = quantile_rank_error_bound(q.capacity)
+                _require(floor <= target,
+                         f"tenant {t.name!r} query {q.name!r}: a capacity-"
+                         f"{q.capacity} quantile sketch bottoms out at rank "
+                         f"error {floor:.4f} over the planning horizon — "
+                         f"above budget.target_rel_error={target}; the "
+                         f"error-budget controller could never settle. "
+                         f"Raise the sketch capacity or relax the target.")

@@ -31,11 +31,15 @@ WHSamp math can run on either of two equivalent realizations:
   kernel, exact thresholds τ_i from ``kernels.sample_mask.ops``, then the
   fused ``sample_mask`` Pallas kernel for the threshold-select pass
   (compiled on TPU, interpret mode elsewhere).
+* ``pallas_fused`` — the whole selection (counts, thresholds via a
+  sort-free bisection on priority bit patterns, tie-exact keep mask) in
+  ONE Pallas kernel (``kernels.fused_level_tick``); through
+  ``whs.level_tick`` it additionally fuses the Alg. 2 weight update and
+  the compaction into the same kernel with VMEM-resident reservoirs.
 
-All produce identical keep-masks for identical priorities (``pallas`` may
-keep extra items on exact f32 priority ties — measure-zero for continuous
-draws); callers pick one by name (``get_backend``) everywhere a sampler
-runs.
+All produce identical keep-masks for identical priorities (exact f32
+priority ties included — measure-zero for continuous draws); callers pick
+one by name (``get_backend``) everywhere a sampler runs.
 """
 from __future__ import annotations
 
@@ -288,6 +292,53 @@ class PallasBackend:
         return keep
 
 
+class PallasFusedBackend:
+    """Single-kernel backend: the whole sampling tick fused in VMEM.
+
+    ``select`` runs the ``fused_level_tick`` kernel's selection stage —
+    per-stratum counts, an exact bitwise binary search for each τ_i (no
+    in-kernel sort), and the strict/tie keep decomposition — in ONE
+    Pallas pass with the item buffer VMEM-resident, so its masks are
+    **bit-identical** to ``argsort``'s even on exact f32 priority ties
+    (unlike ``pallas``, which keeps extras on ties). The level engine
+    additionally routes whole-level ticks through the fused kernel (see
+    ``whs.level_tick``), collapsing sample + weight-update + compaction
+    into one kernel launch per level.
+
+    The dense one-hot working set is ``O(M·X)`` VMEM per problem, so
+    selection falls back to ``argsort`` beyond ``_DENSE_LIMIT``.
+    """
+
+    name = "pallas_fused"
+    flatten_for_level = True
+    fused_level_tick = True
+    _DENSE_LIMIT = 1 << 22
+
+    def counts(self, stratum, valid, num_strata):
+        from repro.kernels.stratified_stats import ops as ss_ops
+
+        stats = ss_ops.stratified_stats(
+            jnp.zeros(stratum.shape, jnp.float32), stratum, valid, num_strata,
+            impl="pallas",
+        )
+        return stats[:, 0]
+
+    def select(self, key, stratum, valid, reservoirs, num_strata, *,
+               priorities=None, max_reservoir=None, batch_hint=1):
+        from repro.kernels.fused_level_tick import ops as ft_ops
+
+        m = stratum.shape[0]
+        if priorities is None:
+            priorities = jax.random.uniform(key, (m,))
+        if max(int(batch_hint), 1) * num_strata * m > self._DENSE_LIMIT:
+            return stratified_priority_sample(
+                key, stratum, valid, reservoirs, num_strata,
+                priorities=priorities,
+            )
+        return ft_ops.fused_select(priorities, stratum, valid, reservoirs,
+                                   num_strata, impl="pallas")
+
+
 _BACKENDS: dict[str, SamplerBackend] = {}
 
 
@@ -298,6 +349,7 @@ def register_backend(backend: SamplerBackend) -> None:
 register_backend(ArgsortBackend())
 register_backend(TopKBackend())
 register_backend(PallasBackend())
+register_backend(PallasFusedBackend())
 
 DEFAULT_BACKEND = "argsort"
 

@@ -213,15 +213,17 @@ def _srs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
 def _whs_level_core(key, t, lvl, values, strata, valid, w_in, c_in,
                     sample_size, *, num_strata, out_capacity, child_of,
                     allocation, backend):
-    """One WHS hierarchy level: sample, compact, route to parents."""
+    """One WHS hierarchy level: sample, compact, route to parents.
+
+    Runs through ``whs.level_tick`` — one fused Pallas kernel for the
+    ``pallas_fused`` backend, the saturation passthrough for the rest —
+    bit-identical to the unfused ``level_whsamp`` + ``level_compact``.
+    """
     n_nodes = values.shape[0]
     keys = _level_keys(key, t, lvl, n_nodes)
-    res = whs.level_whsamp(keys, values, strata, valid, w_in, c_in,
-                           sample_size, num_strata,
-                           allocation=allocation, backend=backend,
-                           max_reservoir=out_capacity)
-    v_c, s_c, valid_c, meta = whs.level_compact(values, strata, res,
-                                                out_capacity)
+    v_c, s_c, valid_c, meta, res = whs.level_tick(
+        keys, values, strata, valid, w_in, c_in, sample_size, num_strata,
+        out_capacity=out_capacity, allocation=allocation, backend=backend)
     present = _present_strata(s_c, valid_c, num_strata)
     packed_v, packed_s, n_deliv = _route_pack(v_c, s_c, valid_c, child_of)
     n_fwd = jnp.sum(valid_c, axis=1, dtype=jnp.int32)

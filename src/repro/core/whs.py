@@ -70,13 +70,23 @@ def whsamp(
     be = sampling.get_backend(backend)
     c = be.counts(batch.stratum, batch.valid, num_strata)
     reservoirs = sampling.allocate_reservoirs(sample_size, c, policy=allocation)
-    # Priorities are drawn here (not inside the backend) so every backend —
-    # and the level-vectorized path — sees identical randomness per key.
-    priorities = jax.random.uniform(key, (batch.capacity,))
-    selected = be.select(
-        key, batch.stratum, batch.valid, reservoirs, num_strata,
-        priorities=priorities, max_reservoir=max_reservoir,
-    )
+
+    def run_select():
+        # Priorities are drawn here (not inside the backend) so every
+        # backend sees identical randomness per key; drawing inside the
+        # branch lets the saturation fast path skip the draw.
+        priorities = jax.random.uniform(key, (batch.capacity,))
+        return be.select(
+            key, batch.stratum, batch.valid, reservoirs, num_strata,
+            priorities=priorities, max_reservoir=max_reservoir,
+        )
+
+    # Saturation fast path (fraction ≥ 1.0): N_i ≥ c_i for every stratum
+    # makes every backend's mask provably ``valid`` bit-for-bit — skip the
+    # draw + selection entirely (see ``level_whsamp`` for the level-wide
+    # version of the same argument).
+    selected = jax.lax.cond(jnp.all(reservoirs >= c), lambda: batch.valid,
+                            run_select)
     y, meta = _whs_meta(c, reservoirs, batch.meta.weight, batch.meta.count,
                         async_calibration)
     return SampleResult(
@@ -124,9 +134,13 @@ def level_whsamp(
     reservoirs = jax.vmap(
         lambda ci: sampling.allocate_reservoirs(sample_size, ci, policy=allocation)
     )(c)
-    priorities = jax.vmap(lambda k: jax.random.uniform(k, (cap,)))(keys)
 
     def run_select():
+        # The priority draw lives inside the selection branch so the
+        # saturation fast path below skips it entirely — bit-identical,
+        # since the draw is a pure function of ``keys`` consumed only
+        # here, and every backend sees the same per-node streams.
+        priorities = jax.vmap(lambda k: jax.random.uniform(k, (cap,)))(keys)
         if getattr(be, "flatten_for_level", False):
             return be.select(
                 keys[0], comp, flat_valid, reservoirs.reshape(-1),
@@ -280,3 +294,93 @@ def level_compact(
         node_ix * num_strata + strata_c, n_nodes * num_strata,
     )
     return values_c, strata_c, slot_valid, meta
+
+
+def level_tick(
+    keys: jax.Array,
+    values: jnp.ndarray,
+    strata: jnp.ndarray,
+    valid: jnp.ndarray,
+    w_in: jnp.ndarray,
+    c_in: jnp.ndarray,
+    sample_size: jnp.ndarray,
+    num_strata: int,
+    *,
+    out_capacity: int,
+    allocation: str = "fair",
+    async_calibration: bool = True,
+    backend: str | sampling.SamplerBackend = sampling.DEFAULT_BACKEND,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, StratumMeta, SampleResult]:
+    """One whole WHS level tick: sample + weight update + compact.
+
+    Bit-identical to ``level_whsamp`` followed by ``level_compact`` for
+    every backend, but lets the tick run as a single pass:
+
+    * Backends advertising ``fused_level_tick`` (``pallas_fused``) run
+      counts, reservoir allocation, threshold selection, the Alg. 2
+      weight update and the compaction as ONE Pallas kernel with the
+      item buffer VMEM-resident (``kernels.fused_level_tick``); only
+      the truncation correction (a tiny ``[n, X]`` pass) stays in XLA.
+    * Every other backend gets the saturation passthrough: when all
+      reservoirs cover their counts AND the buffers are front-packed
+      (the append-only window layout), selection is skipped (see
+      ``level_whsamp``) and the compaction collapses to a truncating
+      copy — zeros beyond the kept range, exactly what the scatter
+      pack produces — killing the exact-path (fraction 1.0) overhead.
+
+    Returns ``(values_c, strata_c, slot_valid, meta, result)``.
+    """
+    n_nodes, cap = values.shape
+    out_cap = min(out_capacity, cap)
+    be = sampling.get_backend(backend)
+
+    if getattr(be, "fused_level_tick", False):
+        from repro.kernels.fused_level_tick import ops as ft_ops
+
+        priorities = jax.vmap(lambda k: jax.random.uniform(k, (cap,)))(keys)
+        (keep, values_c, strata_c, n_sel, c, reservoirs, y, w_out,
+         c_out) = ft_ops.fused_level_tick(
+            values, strata, valid, priorities, w_in, c_in, sample_size,
+            num_strata, out_cap, allocation=allocation,
+            async_calibration=async_calibration, impl="pallas")
+        result = SampleResult(selected=keep,
+                              meta=StratumMeta(weight=w_out, count=c_out),
+                              c=c, y=y, reservoir=reservoirs)
+        n_keep = jnp.minimum(n_sel, out_cap)
+        slot_valid = jnp.arange(out_cap)[None, :] < n_keep[:, None]
+        node_ix = jnp.arange(n_nodes, dtype=jnp.int32)[:, None]
+        meta = _truncation_corrected_meta(
+            slot_valid, result.y, result.meta,
+            node_ix * num_strata + strata_c, n_nodes * num_strata)
+        return values_c, strata_c, slot_valid, meta, result
+
+    result = level_whsamp(keys, values, strata, valid, w_in, c_in,
+                          sample_size, num_strata, allocation=allocation,
+                          async_calibration=async_calibration,
+                          backend=backend, max_reservoir=out_capacity)
+    n_valid = jnp.sum(valid, axis=1, dtype=jnp.int32)
+    iota = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    front_packed = jnp.all(valid == (iota < n_valid[:, None]))
+    saturated = jnp.all(result.reservoir >= result.c)
+    node_ix = jnp.arange(n_nodes, dtype=jnp.int32)[:, None]
+
+    def passthrough():
+        # keep == valid (saturated) and valid is front-packed: packing is
+        # a truncating copy, bit-identical to the scatter path.
+        n_keep = jnp.minimum(n_valid, out_cap)
+        slot_valid = jnp.arange(out_cap)[None, :] < n_keep[:, None]
+        v_c = jnp.where(slot_valid, values[:, :out_cap], 0.0)
+        s_c = jnp.where(slot_valid, strata[:, :out_cap], 0)
+        meta = _truncation_corrected_meta(
+            slot_valid, result.y, result.meta,
+            node_ix * num_strata + s_c, n_nodes * num_strata)
+        return v_c, s_c, slot_valid, meta
+
+    def pack():
+        v_c, s_c, slot_valid, meta = level_compact(values, strata, result,
+                                                   out_cap)
+        return v_c, s_c, slot_valid, meta
+
+    v_c, s_c, slot_valid, meta = jax.lax.cond(saturated & front_packed,
+                                              passthrough, pack)
+    return v_c, s_c, slot_valid, meta, result

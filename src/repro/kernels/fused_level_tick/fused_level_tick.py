@@ -1,0 +1,320 @@
+"""Pallas TPU kernel: the ENTIRE per-level WHS sampling tick, fused.
+
+One grid step = one node of the hierarchy level. The node's interval
+buffer (values / strata / valid / priorities) is loaded into VMEM once
+and every stage of Alg. 2 runs on it without an HBM round-trip:
+
+    counts     c_i            one-hot [cap, X] reduce
+    allocation N_i            fair water-filling (same fori_loop as
+                              ``core.sampling.allocate_reservoirs``)
+    threshold  τ_i            bitwise binary search for the N_i-th
+                              largest priority (31 fixed iterations on
+                              the monotone IEEE-754 order; no in-kernel
+                              sort needed)
+    keep mask                 strict/tie decomposition — bit-identical
+                              to the stable-lexsort law (``argsort``)
+    weight update             Alg. 2 lines 12-20 + Eq. 9 (``_whs_meta``)
+    compaction                cumsum destination + one-hot MXU scatter
+
+The previous pallas backend ran this as three kernels
+(``stratified_stats`` → threshold sort → ``sample_mask``) plus an XLA
+compaction, with the item buffer leaving and re-entering HBM between
+each stage. Here reservoirs and the per-stratum accumulators stay
+VMEM-resident for the whole tick.
+
+Saturation fast path (fraction ≥ 1.0): when every stratum's reservoir
+covers its count, the keep mask is provably ``valid`` — the threshold
+search and tie resolution are skipped under ``pl.when``, and when the
+buffer is additionally front-packed the compaction collapses to a
+truncating copy. This is what removes the exact-path overhead at
+sampling fraction 1.0 (the sampler never loses when it samples
+nothing).
+
+Tie law (the bit-identity recipe, same as ``TopKBackend``): items with
+``u > τ`` are kept outright; items with ``u == τ`` (exact f32
+collisions) are kept in buffer-position order until the reservoir is
+full — exactly the (priority desc, position asc) order of the stable
+lexsort, so masks match ``argsort`` bit-for-bit.
+
+VMEM budget: one node's buffers are ``O(cap·X)`` f32 for the one-hot
+matrices plus ``O(cap·out_capacity)`` for the scatter matrix — at the
+repo's scales (cap ≤ 8192, X ≤ 32) this fits the ~16 MB/core budget;
+larger shapes should fall back to the unfused path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sampling import allocate_reservoirs
+from repro.core.whs import _whs_meta
+
+# Binary-search iterations: priorities live in [0, 1), whose IEEE-754
+# payloads span [0, 0x3F800000) ⊂ [0, 2^30) — 31 halvings pin the
+# threshold to an exact item priority (extra iterations are no-ops).
+_SEARCH_ITERS = 31
+
+
+def _seg_lookup_f32(onehot_f: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Per-item gather ``table[s_k]`` as a one-hot MXU matmul (exact: each
+    row of ``onehot_f`` has a single 1, so the dot returns the f32 entry
+    bit-for-bit; gathers are VPU-serial on TPU, matmuls are not)."""
+    return jax.lax.dot_general(
+        onehot_f, table[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+
+
+def _seg_lookup_i32(onehot_f: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Per-item gather of an i32 table via two f32-exact matmuls (split
+    into 19-bit high / 12-bit low halves — each < 2^24, so the f32
+    matmul is exact — and recombined in integer space)."""
+    hi = _seg_lookup_f32(onehot_f, (table >> 12).astype(jnp.float32))
+    lo = _seg_lookup_f32(onehot_f, (table & 0xFFF).astype(jnp.float32))
+    return hi.astype(jnp.int32) * 4096 + lo.astype(jnp.int32)
+
+
+def _search_tau(u, onehot_f, valid, reservoirs, counts):
+    """Exact per-stratum thresholds: τ_i = the ``N_i``-th largest valid
+    priority of stratum i, found by binary search on the IEEE-754 bit
+    pattern (monotone for non-negative floats). Sentinels match
+    ``kernels.sample_mask.ops.thresholds_from_reservoirs``:
+    keep-nothing (N ≤ 0) → +2.0, keep-everything (c ≤ N) → −1.0."""
+    num_strata = reservoirs.shape[0]
+    n_int = reservoirs.astype(jnp.int32)
+    c_int = counts.astype(jnp.int32)
+    # Effective rank: only searched when 0 < N < c (sentinels otherwise).
+    n_eff = jnp.clip(jnp.minimum(n_int, c_int), 1, None)
+    u_bits = jax.lax.bitcast_convert_type(u, jnp.int32)
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) // 2
+        seg_mid = _seg_lookup_i32(onehot_f, mid)
+        pred = (valid & (u_bits >= seg_mid)).astype(jnp.float32)
+        cnt = jax.lax.dot_general(
+            onehot_f, pred[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        ok = cnt >= n_eff.astype(jnp.float32)   # F(mid) ≥ N: mid feasible
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo0 = jnp.zeros((num_strata,), jnp.int32)            # F(0) = c ≥ n_eff
+    hi0 = jnp.full((num_strata,), 0x3F800001, jnp.int32)  # > bits(max u)
+    lo, _ = jax.lax.fori_loop(0, _SEARCH_ITERS, body, (lo0, hi0))
+    tau = jax.lax.bitcast_convert_type(lo, jnp.float32)
+    return jnp.where(n_int <= 0, 2.0,
+                     jnp.where(c_int <= n_int, -1.0, tau))
+
+
+def _select_block(u, s, m, onehot_f, reservoirs, counts, num_strata):
+    """Keep mask for one VMEM-resident block — τ search + the strict/tie
+    decomposition that reproduces the stable lexsort bit-for-bit."""
+    cap = u.shape[0]
+    tau = _search_tau(u, onehot_f, m, reservoirs, counts)
+    seg_tau = _seg_lookup_f32(onehot_f, tau)
+    strict = m & (u > seg_tau)
+    m_strict = jax.lax.dot_general(
+        onehot_f, strict.astype(jnp.float32)[:, None],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    slack = reservoirs - m_strict                       # f32, int-valued
+    tie = m & (u == seg_tau)
+    # Position-ordered tie rank per stratum: cumsum along the item axis of
+    # the [X, cap] tie matrix, read back at each item's own column.
+    onrow_t = jax.lax.broadcasted_iota(
+        jnp.int32, (num_strata, cap), 0) == s[None, :]
+    ranks = jnp.cumsum(
+        jnp.where(onrow_t & tie[None, :], 1.0, 0.0), axis=1)
+    rank_at = jnp.sum(jnp.where(onrow_t, ranks, 0.0), axis=0)
+    seg_slack = _seg_lookup_f32(onehot_f, slack)
+    return strict | (tie & (rank_at <= seg_slack))
+
+
+def _kernel(values_ref, strata_ref, valid_ref, prio_ref, win_ref, cin_ref,
+            size_ref, keep_ref, vals_ref, strc_ref, nk_ref, c_ref, res_ref,
+            y_ref, w_ref, cout_ref, *, num_strata: int, out_capacity: int,
+            allocation: str, async_calibration: bool):
+    v = values_ref[0, :]
+    s = strata_ref[0, :]
+    m = valid_ref[0, :]
+    u = prio_ref[0, :]
+    cap = v.shape[0]
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (cap, num_strata), 1)
+    onehot_f = jnp.where((s[:, None] == cols) & m[:, None], 1.0, 0.0)
+
+    # --- counts + reservoir allocation (VMEM-resident accumulators) ------
+    c = jnp.sum(onehot_f, axis=0)                               # f32[X]
+    reservoirs = allocate_reservoirs(size_ref[0, 0], c, policy=allocation)
+    c_ref[0, :] = c
+    res_ref[0, :] = reservoirs
+
+    # --- weight update (Alg. 2 lines 12-20 + Eq. 9) ----------------------
+    y, meta = _whs_meta(c, reservoirs, win_ref[0, :], cin_ref[0, :],
+                        async_calibration)
+    y_ref[0, :] = y
+    w_ref[0, :] = meta.weight
+    cout_ref[0, :] = meta.count
+
+    # --- selection, with the saturation fast path ------------------------
+    saturated = jnp.all(reservoirs >= c)
+
+    @pl.when(saturated)
+    def _keep_all():
+        # N_i ≥ c_i everywhere: τ sinks below every priority, ties resolve
+        # to "keep all" — the mask is provably ``valid``. Skips the whole
+        # threshold search (the fraction-1.0 exact path).
+        keep_ref[0, :] = m
+
+    @pl.when(jnp.logical_not(saturated))
+    def _select():
+        keep_ref[0, :] = _select_block(u, s, m, onehot_f, reservoirs, c,
+                                       num_strata)
+
+    # --- compaction ------------------------------------------------------
+    keep = keep_ref[0, :]
+    n_valid = jnp.sum(m.astype(jnp.int32))
+    iota_cap = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)[0, :]
+    front_packed = jnp.all(m == (iota_cap < n_valid))
+    out_iota = jax.lax.broadcasted_iota(jnp.int32, (1, out_capacity), 1)[0, :]
+
+    @pl.when(saturated & front_packed)
+    def _passthrough():
+        # Everything valid is kept and already front-packed: compaction is
+        # a truncating copy (zeros beyond the kept range, matching the
+        # scatter path bit-for-bit).
+        n_keep = jnp.minimum(n_valid, out_capacity)
+        live = out_iota < n_keep
+        vals_ref[0, :] = jnp.where(live, v[:out_capacity], 0.0)
+        strc_ref[0, :] = jnp.where(live, s[:out_capacity], 0)
+        nk_ref[0, 0] = n_valid
+
+    @pl.when(jnp.logical_not(saturated & front_packed))
+    def _pack():
+        dest = jnp.cumsum(keep.astype(jnp.int32)) - 1
+        ok = keep & (dest < out_capacity)
+        dmat = jnp.where((dest[:, None] == out_iota[None, :]) & ok[:, None],
+                         1.0, 0.0)                      # [cap, OC]
+        vals_ref[0, :] = jax.lax.dot_general(
+            dmat, v[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        # Stratum ids are small ints (≪ 2^24): the f32 scatter is exact.
+        strc_ref[0, :] = jax.lax.dot_general(
+            dmat, s.astype(jnp.float32)[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0].astype(jnp.int32)
+        nk_ref[0, 0] = jnp.sum(keep.astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_strata", "out_capacity", "allocation",
+                     "async_calibration", "interpret"))
+def fused_level_tick(
+    values: jnp.ndarray,      # f32[n, cap]
+    strata: jnp.ndarray,      # i32[n, cap]
+    valid: jnp.ndarray,       # bool[n, cap]
+    priorities: jnp.ndarray,  # f32[n, cap]
+    w_in: jnp.ndarray,        # f32[n, X]
+    c_in: jnp.ndarray,        # f32[n, X]
+    sample_size: jnp.ndarray,  # f32[] level budget
+    num_strata: int,
+    out_capacity: int,
+    *,
+    allocation: str = "fair",
+    async_calibration: bool = True,
+    interpret: bool = True,
+):
+    """Run the fused WHS tick over a stacked level (one grid step/node).
+
+    Returns ``(keep, values_c, strata_c, n_keep, c, reservoirs, y, w_out,
+    c_out)`` — the keep mask ``bool[n, cap]``, the compacted forwarding
+    buffers ``[n, out_capacity]`` + per-node kept counts ``i32[n]``, and
+    the per-stratum ``f32[n, X]`` accumulators (counts, reservoirs, Y,
+    W^out, C^out).
+    """
+    n, cap = values.shape
+    x = w_in.shape[-1]
+    size2 = jnp.broadcast_to(
+        jnp.asarray(sample_size, jnp.float32).reshape(1, 1), (1, 1))
+
+    row = pl.BlockSpec((1, cap), lambda i: (i, 0))
+    xrow = pl.BlockSpec((1, x), lambda i: (i, 0))
+    orow = pl.BlockSpec((1, out_capacity), lambda i: (i, 0))
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel, num_strata=x, out_capacity=out_capacity,
+                          allocation=allocation,
+                          async_calibration=async_calibration),
+        grid=(n,),
+        in_specs=[row, row, row, row, xrow, xrow,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[row, orow, orow, pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                   xrow, xrow, xrow, xrow, xrow],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, cap), jnp.bool_),
+            jax.ShapeDtypeStruct((n, out_capacity), jnp.float32),
+            jax.ShapeDtypeStruct((n, out_capacity), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n, x), jnp.float32),
+            jax.ShapeDtypeStruct((n, x), jnp.float32),
+            jax.ShapeDtypeStruct((n, x), jnp.float32),
+            jax.ShapeDtypeStruct((n, x), jnp.float32),
+            jax.ShapeDtypeStruct((n, x), jnp.float32),
+        ],
+        interpret=interpret,
+    )(values, strata, valid, priorities, w_in, c_in, size2)
+    keep, vals_c, strata_c, nk, c, res, y, w_out, c_out = outs
+    return keep, vals_c, strata_c, nk[:, 0], c, res, y, w_out, c_out
+
+
+def _select_kernel(prio_ref, strata_ref, valid_ref, res_ref, keep_ref, *,
+                   num_strata: int):
+    u = prio_ref[0, :]
+    s = strata_ref[0, :]
+    m = valid_ref[0, :]
+    cap = u.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (cap, num_strata), 1)
+    onehot_f = jnp.where((s[:, None] == cols) & m[:, None], 1.0, 0.0)
+    c = jnp.sum(onehot_f, axis=0)
+    reservoirs = res_ref[0, :]
+    saturated = jnp.all(reservoirs >= c)
+
+    @pl.when(saturated)
+    def _keep_all():
+        keep_ref[0, :] = m
+
+    @pl.when(jnp.logical_not(saturated))
+    def _select():
+        keep_ref[0, :] = _select_block(u, s, m, onehot_f, reservoirs, c,
+                                       num_strata)
+
+
+@functools.partial(jax.jit, static_argnames=("num_strata", "interpret"))
+def fused_select(
+    priorities: jnp.ndarray,  # f32[M]
+    strata: jnp.ndarray,      # i32[M]
+    valid: jnp.ndarray,       # bool[M]
+    reservoirs: jnp.ndarray,  # f32[X]
+    num_strata: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Selection-only entry (the ``SamplerBackend.select`` contract):
+    caller-provided reservoirs, same τ search + tie law, bool[M] mask."""
+    m_items = priorities.shape[0]
+    return pl.pallas_call(
+        functools.partial(_select_kernel, num_strata=num_strata),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, m_items), lambda i: (0, 0)),
+            pl.BlockSpec((1, m_items), lambda i: (0, 0)),
+            pl.BlockSpec((1, m_items), lambda i: (0, 0)),
+            pl.BlockSpec((1, num_strata), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m_items), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, m_items), jnp.bool_),
+        interpret=interpret,
+    )(priorities.reshape(1, -1), strata.reshape(1, -1),
+      valid.reshape(1, -1), reservoirs.reshape(1, -1)).reshape(-1)

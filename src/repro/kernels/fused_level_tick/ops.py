@@ -1,0 +1,56 @@
+"""Public ops for the fused level tick: kernel/oracle dispatch.
+
+``impl``: ``pallas`` runs the fused Pallas kernel (compiled on TPU,
+interpret mode elsewhere); ``ref`` runs the pure-jnp oracle that
+composes the unfused reference stages; ``auto`` picks ``pallas``.
+Both produce bit-identical outputs (the tie law reproduces the stable
+lexsort exactly), which ``tests/test_fused_tick.py`` pins.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.fused_level_tick import ref
+from repro.kernels.fused_level_tick.fused_level_tick import (
+    fused_level_tick as _pallas_tick,
+    fused_select as _pallas_select,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_strata", "out_capacity", "allocation",
+                     "async_calibration", "impl"))
+def fused_level_tick(values, strata, valid, priorities, w_in, c_in,
+                     sample_size, num_strata: int, out_capacity: int,
+                     *, allocation: str = "fair",
+                     async_calibration: bool = True, impl: str = "auto"):
+    """One fused WHS tick over a stacked level. Returns ``(keep,
+    values_c, strata_c, n_keep, c, reservoirs, y, w_out, c_out)``."""
+    if impl == "pallas" or impl == "auto":
+        return _pallas_tick(values, strata, valid, priorities, w_in, c_in,
+                            sample_size, num_strata, out_capacity,
+                            allocation=allocation,
+                            async_calibration=async_calibration,
+                            interpret=not _on_tpu())
+    return ref.fused_level_tick(values, strata, valid, priorities, w_in,
+                                c_in, sample_size, num_strata, out_capacity,
+                                allocation=allocation,
+                                async_calibration=async_calibration)
+
+
+@functools.partial(jax.jit, static_argnames=("num_strata", "impl"))
+def fused_select(priorities, strata, valid, reservoirs, num_strata: int,
+                 *, impl: str = "auto"):
+    """Selection-only fused pass (the ``SamplerBackend.select`` contract)."""
+    if impl == "pallas" or impl == "auto":
+        return _pallas_select(priorities, strata, valid, reservoirs,
+                              num_strata, interpret=not _on_tpu())
+    return ref.fused_select(priorities, strata, valid, reservoirs,
+                            num_strata)

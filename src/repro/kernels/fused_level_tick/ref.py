@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the fused level-tick kernel.
+
+Composes the exact reference pieces the unfused path runs — per-stratum
+counts, fair reservoir allocation, the stable-lexsort selection law
+(``stratified_priority_sample``), the Alg. 2 weight update and the
+row-wise compaction — so the kernel can be bit-checked against the
+``argsort`` oracle stage by stage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling, whs
+
+
+def fused_level_tick(
+    values: jnp.ndarray,      # f32[n, cap]
+    strata: jnp.ndarray,      # i32[n, cap]
+    valid: jnp.ndarray,       # bool[n, cap]
+    priorities: jnp.ndarray,  # f32[n, cap]
+    w_in: jnp.ndarray,        # f32[n, X]
+    c_in: jnp.ndarray,        # f32[n, X]
+    sample_size: jnp.ndarray,
+    num_strata: int,
+    out_capacity: int,
+    *,
+    allocation: str = "fair",
+    async_calibration: bool = True,
+):
+    n, cap = values.shape
+
+    def node(s_row, m_row, u_row):
+        c = sampling.stratum_counts(s_row, m_row, num_strata)
+        res = sampling.allocate_reservoirs(sample_size, c, policy=allocation)
+        keep = sampling.stratified_priority_sample(
+            None, s_row, m_row, res, num_strata, priorities=u_row)
+        return c, res, keep
+
+    c, reservoirs, keep = jax.vmap(node)(strata, valid, priorities)
+    y, meta = whs._whs_meta(c, reservoirs, w_in, c_in, async_calibration)
+    values_c, strata_c, n_keep = whs.pack_rows(values, strata, keep,
+                                               out_capacity)
+    return (keep, values_c, strata_c, n_keep, c, reservoirs, y,
+            meta.weight, meta.count)
+
+
+def fused_select(
+    priorities: jnp.ndarray,  # f32[M]
+    strata: jnp.ndarray,      # i32[M]
+    valid: jnp.ndarray,       # bool[M]
+    reservoirs: jnp.ndarray,  # f32[X]
+    num_strata: int,
+) -> jnp.ndarray:
+    return sampling.stratified_priority_sample(
+        None, strata, valid, reservoirs, num_strata, priorities=priorities)

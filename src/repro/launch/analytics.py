@@ -633,7 +633,7 @@ def main(argv=None):
                     help="scan engine: ticks fused per epoch dispatch "
                          "(default: min(ticks, 64))")
     ap.add_argument("--backend", default="topk",
-                    choices=["argsort", "topk", "pallas"],
+                    choices=["argsort", "topk", "pallas", "pallas_fused"],
                     help="sampler selection backend: argsort = lexsort "
                          "reference, topk = dense partial-selection "
                          "thresholds, pallas = fused kernels (interpret "

@@ -114,8 +114,10 @@ class CompiledQueryPlan:
             elif sp.kind == "quantile":
                 st2 = sketches.quantile_update(kq, st, batch.value, w_item)
                 a = sketches.quantile_query(st2, jnp.asarray(sp.qs))
-                # live bound: 2·√(compactions so far)/C — honest for
-                # arbitrarily long standing-query streams.
+                # live bound: 2·√(Σ quantum²)/W over the leveled
+                # compaction history — honest for arbitrarily long
+                # standing-query streams, and tighter than the collapsed
+                # 2·√U/C because low-level quanta stay small.
                 b = jnp.full((len(sp.qs),), 1.0) * st2.rank_error_bound
             elif sp.kind == "heavy_hitters":
                 keys = sketches.hh_item_key(batch.value)

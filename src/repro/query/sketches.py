@@ -7,15 +7,20 @@ dispatch and update once per window with no host round-trip. Both are
 sketch's summary in, which is what lets one edge sample answer many
 standing queries (and many tenants share one sketch pipeline).
 
-``QuantileSketch`` — a KLL-style compactor collapsed to one weighted
-buffer of ``C`` summary points. An update merges the current summary
-with the (weighted) batch, sorts by value, and — when over capacity —
-compacts back to ``C`` points at randomized equi-weight rank targets
-``t_k = (k + u)·W/C``, each re-weighted to ``W/C``. The randomized
-offset ``u`` makes every compaction's rank perturbation zero-mean
-(KLL's core trick), so errors across compactions accumulate as a random
-walk, not linearly: rank error ≈ √(#compactions)/C. While the total
-weight still fits in ``C`` points the summary is exact.
+``QuantileSketch`` — a true multi-level KLL compactor: ``L`` weighted
+buffers of ``C`` points each (``kll_schedule``). A batch enters level 0;
+any level that overflows its capacity compacts its buffer at randomized
+equi-weight rank targets ``t_k = (k + u)·W/m`` and pushes the ``m = C/2``
+survivors (weight ``W/m`` each) up one level, so heavy quanta live only
+in the rarely-compacted top buffer (which compacts in place to ``C``
+points). The randomized offset ``u`` makes every compaction's rank
+perturbation zero-mean (KLL's core trick), so perturbations random-walk:
+the sketch tracks ``err_q2 = Σ quantum²`` across its history and reports
+``rank_error_bound = 2·√(err_q2)/W`` — each level-``h`` quantum covers
+only that level's buffer weight, which is why the leveled bound beats
+the collapsed single-buffer ``2·√U/C`` on long streams. While a level's
+live points fit in ``C`` slots its fold is lossless, so a stream that
+never exceeds level 0 is summarised exactly.
 
 ``HeavyHitterSketch`` — a weighted count-min sketch (``depth × width``,
 multiply-shift hashing) plus a tracked top-``k`` candidate set. Batch
@@ -42,6 +47,7 @@ on TPU, jnp oracle elsewhere).
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple
 
@@ -56,19 +62,26 @@ HH_EMPTY_KEY = jnp.int32(2**31 - 1)   # sentinel: unoccupied top-k slot
 
 # --------------------------------------------------------------- quantile --
 class QuantileSketch(NamedTuple):
-    """``value``/``weight`` f32[C]; weight 0 marks an empty slot. Slots are
-    kept value-sorted (empty slots may interleave; they carry no mass).
-    ``compactions`` f32[] counts lossy compaction steps — it drives the
-    reported rank-error bound (``rank_error_bound``), which a lossless
-    (under-capacity) summary keeps at exactly 0."""
+    """``value``/``weight`` f32[L, C]: ``L`` level buffers of ``C`` slots
+    (``kll_schedule``); weight 0 marks an empty slot. Each level's live
+    slots are kept value-sorted and packed to the front. ``compactions``
+    f32[] counts lossy compaction steps; ``err_q2`` f32[] accumulates the
+    squared weight quantum of each — together they drive the reported
+    rank-error bound (``rank_error_bound``), which a lossless (never
+    overflowed) summary keeps at exactly 0."""
 
     value: jnp.ndarray
     weight: jnp.ndarray
     compactions: jnp.ndarray
+    err_q2: jnp.ndarray
+
+    @property
+    def levels(self) -> int:
+        return self.value.shape[0]
 
     @property
     def capacity(self) -> int:
-        return self.value.shape[0]
+        return self.value.shape[-1]
 
     @property
     def total_weight(self) -> jnp.ndarray:
@@ -78,111 +91,240 @@ class QuantileSketch(NamedTuple):
     def rank_error_bound(self) -> jnp.ndarray:
         """Current ±2σ rank-error bound (fraction of total weight).
 
-        One compaction perturbs any rank by at most one weight quantum
-        ``W/C`` with a zero-mean randomized sign; over ``U`` compactions
-        the perturbations random-walk, so ±2σ ≈ ``2·√U/C`` — tracked
-        live, so the bound stays honest for arbitrarily long streams."""
+        A compaction at buffer weight ``W_buf`` perturbs any rank by at
+        most one weight quantum ``q = W_buf/m`` with a zero-mean
+        randomized sign; independent perturbations random-walk, so
+        ±2σ = ``2·√(Σ q²)/W``. Level-``h`` quanta cover only that level's
+        buffer weight — far below total ``W`` for long streams — so this
+        is strictly tighter than the collapsed one-buffer ``2·√U/C``
+        whenever any compaction ran below the top level."""
         return jnp.where(
             self.compactions > 0.0,
-            2.0 * jnp.sqrt(jnp.maximum(self.compactions, 1.0))
-            / self.capacity,
+            2.0 * jnp.sqrt(self.err_q2)
+            / jnp.maximum(self.total_weight, 1e-30),
             0.0)
 
 
+def kll_schedule(capacity: int) -> tuple[int, ...]:
+    """Per-level slot capacities for a ``capacity``-point sketch.
+
+    Uniform ``C`` slots per level: level 0 must hold ``capacity`` points
+    so the ≤-capacity stream stays exact (`quantile_init`'s lossless
+    contract), and equal upper levels keep every fold's argsort the same
+    cost. Depth grows with capacity — tiny sketches don't benefit from
+    levels they can never fill."""
+    if capacity < 16:
+        levels = 1
+    elif capacity < 64:
+        levels = 2
+    else:
+        levels = 4
+    return (capacity,) * levels
+
+
 def quantile_init(capacity: int) -> QuantileSketch:
-    return QuantileSketch(value=jnp.zeros((capacity,), jnp.float32),
-                          weight=jnp.zeros((capacity,), jnp.float32),
-                          compactions=jnp.zeros((), jnp.float32))
+    levels = len(kll_schedule(capacity))
+    return QuantileSketch(value=jnp.zeros((levels, capacity), jnp.float32),
+                          weight=jnp.zeros((levels, capacity), jnp.float32),
+                          compactions=jnp.zeros((), jnp.float32),
+                          err_q2=jnp.zeros((), jnp.float32))
 
 
 def quantile_rank_error_bound(capacity: int, max_updates: int = 64) -> float:
     """Static planning bound: the rank error a ``capacity`` sketch stays
-    within across ``max_updates`` compactions (2·√U/C — see
-    ``QuantileSketch.rank_error_bound`` for the live per-window value).
-    Validated empirically in ``benchmarks/fig8_accuracy.py``."""
-    return 2.0 * math.sqrt(float(max_updates)) / float(capacity)
+    within across ``max_updates`` batch folds, for any batch size.
+
+    Runs the leveled schedule's weight bookkeeping on the host (no data,
+    just per-level counts/weights) and takes the worst ``2·√(Σq²)/W``
+    over a batch-size grid spanning under- to over-capacity batches —
+    the quantum sum is monotone in how often low levels spill, which the
+    grid's extremes bracket. Strictly tighter than the old collapsed
+    ``2·√U/C`` whenever the schedule has >1 level. Validated empirically
+    in ``tests/test_query_plane.py`` / ``benchmarks/fig8_accuracy.py``."""
+    ks = kll_schedule(capacity)
+    top = len(ks) - 1
+    worst = 0.0
+    for batch in sorted({max(capacity // 4, 1), capacity, 4 * capacity}):
+        n = [0.0] * len(ks)
+        w = [0.0] * len(ks)
+        var = 0.0
+        for _ in range(int(max_updates)):
+            cv, cw = float(batch), float(batch)
+            for h, k in enumerate(ks):
+                n[h] += cv
+                w[h] += cw
+                if n[h] <= k:
+                    break
+                m = k if h == top else k // 2
+                q = w[h] / m
+                var += q * q
+                if h == top:
+                    n[h] = float(k)   # in-place compact, no spill
+                    break
+                cv, cw = float(m), w[h]
+                n[h] = 0.0
+                w[h] = 0.0
+        total = float(max_updates) * float(batch)
+        worst = max(worst, 2.0 * math.sqrt(var) / total)
+    return worst
 
 
-def quantile_update(key: jax.Array, sk: QuantileSketch, values: jnp.ndarray,
-                    weights: jnp.ndarray, *, impl: str = "auto"
-                    ) -> QuantileSketch:
-    """Fold a weighted batch (weight 0 = excluded item) into the summary."""
-    cap = sk.capacity
-    v = jnp.concatenate([sk.value, values])
-    w = jnp.concatenate([sk.weight, jnp.maximum(weights, 0.0)])
+def _fold_level(key: jax.Array, lvl_v: jnp.ndarray, lvl_w: jnp.ndarray,
+                add_v: jnp.ndarray, add_w: jnp.ndarray, *, m_up: int,
+                impl: str):
+    """Fold extra weighted points into one ``C``-slot level buffer.
+
+    Returns ``(value[C], weight[C], carry_v[m_up], carry_w[m_up],
+    did_compact, q2)``. While the live points fit, the fold is lossless
+    (stable value-sorted live-first pack) and the carry is empty. On
+    overflow the buffer compacts at randomized equi-weight rank targets:
+    ``m_up > 0`` pushes the ``m_up`` survivors up as the carry and empties
+    the level; ``m_up == 0`` (top level) compacts in place to ``C``
+    points. ``q2`` is the squared weight quantum of the compaction."""
+    cap = lvl_v.shape[0]
+    m = cap if m_up == 0 else m_up
+    v = jnp.concatenate([lvl_v, add_v])
+    w = jnp.concatenate([lvl_w, jnp.maximum(add_w, 0.0)])
     order = jnp.argsort(v)
     v_s, w_s = v[order], w[order]
     cumw = jnp.cumsum(w_s)
     total = cumw[-1]
     n_live = jnp.sum(w_s > 0.0)
+    zero_carry = jnp.zeros((m_up,), jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
 
     def exact():
         # Everything fits: pack live slots to the front (stable, so the
-        # value ordering survives) — the summary is lossless.
+        # value ordering survives) — the fold is lossless.
         pack = jnp.argsort(jnp.where(w_s > 0.0, 0, 1), stable=True)
-        return v_s[pack][:cap], w_s[pack][:cap], sk.compactions
+        return (v_s[pack][:cap], w_s[pack][:cap], zero_carry, zero_carry,
+                zero, zero)
 
     def compact():
         u = jax.random.uniform(key, ())
-        t = (jnp.arange(cap, dtype=jnp.float32) + u) * (total / cap)
-        cumw_prev = jnp.concatenate([jnp.zeros((1,), jnp.float32), cumw[:-1]])
+        q = total / m
+        t = (jnp.arange(m, dtype=jnp.float32) + u) * q
+        cumw_prev = jnp.concatenate([jnp.zeros((1,), jnp.float32),
+                                     cumw[:-1]])
         picked = sk_ops.quantile_compact(v_s, cumw_prev, cumw, t, impl=impl)
         # f32 rounding can push the last target(s) to >= total; rank-W is
         # the max live value by definition.
         vmax = jnp.max(jnp.where(w_s > 0.0, v_s, -jnp.inf))
         picked = jnp.where(t >= total, vmax, picked)
-        return (picked, jnp.full((cap,), total / cap, jnp.float32),
-                sk.compactions + 1.0)
+        pw = jnp.full((m,), q, jnp.float32)
+        one = jnp.ones((), jnp.float32)
+        if m_up == 0:
+            return (picked, pw, zero_carry, zero_carry, one, q * q)
+        return (jnp.zeros((cap,), jnp.float32),
+                jnp.zeros((cap,), jnp.float32), picked, pw, one, q * q)
 
-    value, weight, compactions = jax.lax.cond(n_live <= cap, exact, compact)
-    return QuantileSketch(value=value, weight=weight,
-                          compactions=compactions)
+    return jax.lax.cond(n_live <= cap, exact, compact)
 
 
+def _fold_all(key: jax.Array, sk: QuantileSketch, incoming, *, impl: str
+              ) -> QuantileSketch:
+    """Cascade a per-level list of extra ``(value, weight)`` buffers (or
+    ``None``) through the sketch, carrying each level's spill up."""
+    levels, cap = sk.value.shape
+    carry_v = jnp.zeros((0,), jnp.float32)
+    carry_w = jnp.zeros((0,), jnp.float32)
+    comp, err = sk.compactions, sk.err_q2
+    rows_v, rows_w = [], []
+    for h in range(levels):
+        add_v, add_w = [carry_v], [carry_w]
+        if incoming[h] is not None:
+            add_v.append(incoming[h][0])
+            add_w.append(incoming[h][1])
+        m_up = 0 if h == levels - 1 else cap // 2
+        nv, nw, carry_v, carry_w, did, q2 = _fold_level(
+            jax.random.fold_in(key, h), sk.value[h], sk.weight[h],
+            jnp.concatenate(add_v), jnp.concatenate(add_w),
+            m_up=m_up, impl=impl)
+        rows_v.append(nv)
+        rows_w.append(nw)
+        comp = comp + did
+        err = err + q2
+    return QuantileSketch(value=jnp.stack(rows_v), weight=jnp.stack(rows_w),
+                          compactions=comp, err_q2=err)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def quantile_update(key: jax.Array, sk: QuantileSketch, values: jnp.ndarray,
+                    weights: jnp.ndarray, *, impl: str = "auto"
+                    ) -> QuantileSketch:
+    """Fold a weighted batch (weight 0 = excluded item) into the summary.
+
+    The batch enters level 0; overflow cascades up the schedule, one
+    (possible) compaction per level."""
+    incoming = [(values, weights)] + [None] * (sk.levels - 1)
+    return _fold_all(key, sk, incoming, impl=impl)
+
+
+@jax.jit
 def quantile_query(sk: QuantileSketch, qs: jnp.ndarray) -> jnp.ndarray:
-    """f32[len(qs)] value estimates at quantiles ``qs`` (each in [0, 1])."""
-    order = jnp.argsort(sk.value)
-    v_s, w_s = sk.value[order], sk.weight[order]
+    """f32[len(qs)] value estimates at quantiles ``qs`` (each in [0, 1]).
+
+    All levels answer together: the flattened ``[L·C]`` weighted point
+    set is one summary — level only matters for *where compaction error
+    entered*, not for querying."""
+    flat_v = sk.value.reshape(-1)
+    flat_w = sk.weight.reshape(-1)
+    order = jnp.argsort(flat_v)
+    v_s, w_s = flat_v[order], flat_w[order]
     cumw = jnp.cumsum(w_s)
     total = cumw[-1]
     t = jnp.clip(qs, 0.0, 1.0) * total
     # first live slot with cumw > t; q == 1.0 maps to the max live value
+    n = flat_v.shape[0]
     idx = jnp.searchsorted(cumw, t, side="right")
     vmax = jnp.max(jnp.where(w_s > 0.0, v_s, -jnp.inf))
-    out = jnp.where(idx < sk.capacity, v_s[jnp.minimum(idx, sk.capacity - 1)],
-                    vmax)
+    out = jnp.where(idx < n, v_s[jnp.minimum(idx, n - 1)], vmax)
     return jnp.where(total > 0.0, out, 0.0)
 
 
+@functools.partial(jax.jit, static_argnames=("impl",))
 def quantile_merge(key: jax.Array, a: QuantileSketch, b: QuantileSketch,
                    *, impl: str = "auto") -> QuantileSketch:
-    """Merge two summaries into one of ``a``'s capacity.
+    """Merge two summaries into one with ``a``'s schedule.
 
-    Folding ``b``'s weighted buffer into ``a`` is the same operation as
-    folding a batch in (mergeability by construction); ``b``'s compaction
-    history is added so the merged ``rank_error_bound`` stays honest
-    (rank errors of the two histories random-walk independently — summing
-    the counts upper-bounds the merged variance)."""
-    out = quantile_update(key, a._replace(compactions=a.compactions
-                                          + b.compactions),
-                          b.value, b.weight, impl=impl)
-    return out
+    Same-schedule sketches merge level-wise — level-``h`` points carry
+    level-``h`` quanta, so keeping them at their level preserves the
+    leveled error accounting (mergeability by construction: each level
+    fold is the batch-fold operation). A ``b`` with a different schedule
+    flattens into level 0 like a batch. Both histories' ``compactions``
+    and ``err_q2`` are added so the merged ``rank_error_bound`` stays
+    honest (the two histories' rank errors random-walk independently —
+    summing the variances upper-bounds the merged variance)."""
+    base = a._replace(compactions=a.compactions + b.compactions,
+                      err_q2=a.err_q2 + b.err_q2)
+    if b.value.shape == a.value.shape:
+        incoming = [(b.value[h], b.weight[h]) for h in range(a.levels)]
+    else:
+        incoming = ([(b.value.reshape(-1), b.weight.reshape(-1))]
+                    + [None] * (a.levels - 1))
+    return _fold_all(key, base, incoming, impl=impl)
 
 
+@functools.partial(jax.jit, static_argnames=("impl",))
 def quantile_merge_stacked(key: jax.Array, stacked: QuantileSketch,
                            *, impl: str = "auto") -> QuantileSketch:
     """Merge ``N`` stacked summaries (leaves ``[N, ...]`` — the layout an
-    ``all_gather`` of per-device state produces) with ONE compaction.
+    ``all_gather`` of per-device state produces) in one level-wise pass.
 
     Equivalent to a left fold of :func:`quantile_merge` up to answer
-    equivalence, but the single compaction adds one rank perturbation
-    instead of ``N − 1``, so the merged bound is tighter."""
-    cap = stacked.value.shape[-1]
-    base = QuantileSketch(value=jnp.zeros((cap,), jnp.float32),
-                          weight=jnp.zeros((cap,), jnp.float32),
-                          compactions=jnp.sum(stacked.compactions))
-    return quantile_update(key, base, stacked.value.reshape(-1),
-                           stacked.weight.reshape(-1), impl=impl)
+    equivalence, but each level compacts at most once for the whole
+    merge (≤ ``L`` rank perturbations instead of up to ``L·(N − 1)``),
+    so the merged bound is tighter."""
+    levels, cap = stacked.value.shape[-2:]
+    base = QuantileSketch(
+        value=jnp.zeros((levels, cap), jnp.float32),
+        weight=jnp.zeros((levels, cap), jnp.float32),
+        compactions=jnp.sum(stacked.compactions),
+        err_q2=jnp.sum(stacked.err_q2))
+    incoming = [(stacked.value[..., h, :].reshape(-1),
+                 stacked.weight[..., h, :].reshape(-1))
+                for h in range(levels)]
+    return _fold_all(key, base, incoming, impl=impl)
 
 
 # ---------------------------------------------------------- heavy hitters --

@@ -11,8 +11,8 @@ import pytest
 from repro.core import sampling, whs
 from repro.core.types import IntervalBatch, StratumMeta
 
-BACKENDS = ("argsort", "topk", "pallas")
-ALT_BACKENDS = ("topk", "pallas")   # compared against the argsort reference
+BACKENDS = ("argsort", "topk", "pallas", "pallas_fused")
+ALT_BACKENDS = ("topk", "pallas", "pallas_fused")   # compared against the argsort reference
 
 
 def _batch(seed, m, x, skew=None, valid_frac=1.0):

@@ -1,0 +1,186 @@
+"""Fused single-kernel level tick: the Pallas kernel must be bit-identical
+to the jnp oracle (counts + allocation + argsort selection + Alg. 2 weight
+update + scatter pack), and ``whs.level_tick`` with the ``pallas_fused``
+backend must be bit-identical to ``level_whsamp`` + ``level_compact`` with
+the ``argsort`` reference. All checks run in interpret mode off-TPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling, whs
+from repro.kernels.fused_level_tick import ops as ft_ops
+from repro.kernels.fused_level_tick import ref as ft_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _level(seed, n, cap, x, fill=1.0, front_packed=True):
+    """A stacked level: [n, cap] buffers with ~fill*cap live items."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(100, 25, (n, cap)).astype(np.float32)
+    strata = rng.integers(0, x, (n, cap)).astype(np.int32)
+    counts = rng.integers(0, max(int(fill * cap), 1) + 1, n)
+    if front_packed:
+        valid = np.arange(cap)[None, :] < counts[:, None]
+    else:
+        valid = np.zeros((n, cap), bool)
+        for i in range(n):
+            valid[i, rng.choice(cap, counts[i], replace=False)] = True
+    w_in = np.abs(rng.normal(1, 0.2, (n, x))).astype(np.float32)
+    c_in = rng.integers(0, 500, (n, x)).astype(np.float32)
+    u = rng.random((n, cap)).astype(np.float32)
+    return (jnp.asarray(vals), jnp.asarray(strata), jnp.asarray(valid),
+            jnp.asarray(u), jnp.asarray(w_in), jnp.asarray(c_in))
+
+
+def _assert_tick_equal(a, b):
+    names = ("keep", "values_c", "strata_c", "n_keep", "c", "reservoirs",
+             "y", "w_out", "c_out")
+    for name, x, y in zip(names, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+
+
+# ------------------------------------------------- kernel vs jnp oracle --
+@pytest.mark.parametrize("n,cap,x,budget,fill,packed", [
+    (4, 256, 4, 60, 1.0, True),
+    (2, 512, 8, 500, 0.6, True),
+    (3, 128, 3, 7, 0.9, False),     # holes: scatter pack path
+    (1, 1024, 16, 999, 1.0, True),  # budget ~= capacity: saturation path
+    (2, 256, 5, 0, 1.0, True),      # zero budget: sentinel thresholds
+])
+def test_fused_kernel_matches_oracle(n, cap, x, budget, fill, packed):
+    vals, strata, valid, u, w_in, c_in = _level(
+        7 * n + cap, n, cap, x, fill=fill, front_packed=packed)
+    size = jnp.asarray(float(budget), jnp.float32)
+    out_cap = cap
+    a = ft_ops.fused_level_tick(vals, strata, valid, u, w_in, c_in, size,
+                                x, out_cap, impl="pallas")
+    b = ft_ops.fused_level_tick(vals, strata, valid, u, w_in, c_in, size,
+                                x, out_cap, impl="ref")
+    _assert_tick_equal(a, b)
+
+
+def test_fused_kernel_truncating_out_capacity():
+    vals, strata, valid, u, w_in, c_in = _level(11, 3, 256, 4)
+    size = jnp.asarray(48.0, jnp.float32)
+    for out_cap in (64, 96):
+        a = ft_ops.fused_level_tick(vals, strata, valid, u, w_in, c_in,
+                                    size, 4, out_cap, impl="pallas")
+        b = ft_ops.fused_level_tick(vals, strata, valid, u, w_in, c_in,
+                                    size, 4, out_cap, impl="ref")
+        _assert_tick_equal(a, b)
+
+
+def test_fused_select_matches_argsort_reference():
+    rng = np.random.default_rng(3)
+    m, x = 4096, 8
+    u = jnp.asarray(rng.random(m).astype(np.float32))
+    strata = jnp.asarray(rng.integers(0, x, m).astype(np.int32))
+    valid = jnp.asarray(rng.random(m) < 0.8)
+    res = jnp.asarray(rng.integers(0, 200, x).astype(np.float32))
+    a = ft_ops.fused_select(u, strata, valid, res, x, impl="pallas")
+    b = ft_ops.fused_select(u, strata, valid, res, x, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_select_exact_ties_match_argsort():
+    """Quantised priorities force real f32 collisions; the in-kernel tie
+    rank must keep exactly the earliest-position ties, like lexsort."""
+    rng = np.random.default_rng(9)
+    m, x = 8192, 4
+    u = (rng.integers(0, 97, m) / 97.0).astype(np.float32)  # heavy ties
+    strata = jnp.asarray(rng.integers(0, x, m).astype(np.int32))
+    valid = jnp.asarray(np.ones(m, bool))
+    res = jnp.asarray(np.full(x, 37.0, np.float32))
+    a = ft_ops.fused_select(jnp.asarray(u), strata, valid, res, x,
+                            impl="pallas")
+    b = ft_ops.fused_select(jnp.asarray(u), strata, valid, res, x,
+                            impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------- level_tick vs unfused reference --
+@pytest.mark.parametrize("backend", ["pallas_fused", "argsort", "topk"])
+@pytest.mark.parametrize("fill,packed", [(1.0, True), (0.5, True),
+                                         (0.8, False)])
+def test_level_tick_matches_unfused_pipeline(backend, fill, packed):
+    n, cap, x = 3, 256, 4
+    vals, strata, valid, u, w_in, c_in = _level(21, n, cap, x, fill=fill,
+                                                front_packed=packed)
+    keys = jax.random.split(jax.random.key(5), n)
+    size = jnp.asarray(40.0, jnp.float32)
+    out_cap = 128
+
+    vc, sc, sv, meta, res = whs.level_tick(
+        keys, vals, strata, valid, w_in, c_in, size, x,
+        out_capacity=out_cap, backend=backend)
+
+    # Unfused reference, always through the argsort oracle.
+    ref_res = whs.level_whsamp(keys, vals, strata, valid, w_in, c_in, size,
+                               x, max_reservoir=out_cap, backend="argsort")
+    rvc, rsc, rsv, rmeta = whs.level_compact(vals, strata, ref_res,
+                                             out_capacity=out_cap)
+    np.testing.assert_array_equal(np.asarray(vc), np.asarray(rvc))
+    np.testing.assert_array_equal(np.asarray(sc), np.asarray(rsc))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(rsv))
+    np.testing.assert_array_equal(np.asarray(meta.weight),
+                                  np.asarray(rmeta.weight))
+    np.testing.assert_array_equal(np.asarray(meta.count),
+                                  np.asarray(rmeta.count))
+    np.testing.assert_array_equal(np.asarray(res.selected),
+                                  np.asarray(ref_res.selected))
+
+
+def test_level_tick_saturated_passthrough_bit_identical():
+    """fraction >= 1.0: budget covers every stratum, buffers front-packed
+    -> the passthrough branch must equal the full select + scatter pack."""
+    n, cap, x = 2, 256, 4
+    vals, strata, valid, u, w_in, c_in = _level(33, n, cap, x, fill=0.4)
+    keys = jax.random.split(jax.random.key(8), n)
+    size = jnp.asarray(float(cap), jnp.float32)   # saturating budget
+    for backend in ("argsort", "pallas_fused"):
+        vc, sc, sv, meta, res = whs.level_tick(
+            keys, vals, strata, valid, w_in, c_in, size, x,
+            out_capacity=cap, backend=backend)
+        np.testing.assert_array_equal(np.asarray(res.selected),
+                                      np.asarray(valid))
+        ref_res = whs.level_whsamp(keys, vals, strata, valid, w_in, c_in,
+                                   size, x, max_reservoir=cap,
+                                   backend="argsort")
+        rvc, rsc, rsv, rmeta = whs.level_compact(vals, strata, ref_res,
+                                                 out_capacity=cap)
+        np.testing.assert_array_equal(np.asarray(vc), np.asarray(rvc))
+        np.testing.assert_array_equal(np.asarray(meta.weight),
+                                      np.asarray(rmeta.weight))
+
+
+def test_backend_registry_advertises_fused():
+    be = sampling.get_backend("pallas_fused")
+    assert getattr(be, "fused_level_tick", False)
+    assert getattr(be, "flatten_for_level", False)
+    # plain backends must NOT take the fused branch
+    assert not getattr(sampling.get_backend("argsort"),
+                       "fused_level_tick", False)
+
+
+def test_oracle_composes_unfused_stages():
+    """The ref oracle itself must agree with the hand-composed stages —
+    guards against the oracle and kernel drifting together."""
+    n, cap, x = 2, 128, 4
+    vals, strata, valid, u, w_in, c_in = _level(55, n, cap, x, fill=0.7)
+    size = jnp.asarray(30.0, jnp.float32)
+    keep, vc, sc, n_keep, c, res, y, w_out, c_out = ft_ref.fused_level_tick(
+        vals, strata, valid, u, w_in, c_in, size, x, cap)
+    for i in range(n):
+        counts_i = sampling.stratum_counts(strata[i], valid[i], x)
+        np.testing.assert_array_equal(np.asarray(c[i]),
+                                      np.asarray(counts_i))
+        res_i = sampling.allocate_reservoirs(size, counts_i, policy="fair")
+        np.testing.assert_array_equal(np.asarray(res[i]),
+                                      np.asarray(res_i))
+        sel_i = sampling.stratified_priority_sample(
+            None, strata[i], valid[i], res_i, x, priorities=u[i])
+        np.testing.assert_array_equal(np.asarray(keep[i]),
+                                      np.asarray(sel_i))

@@ -47,7 +47,7 @@ def _assert_same_results(a: HostTree, b: HostTree):
 
 
 # ---------------------------------------------------------- equivalence --
-@pytest.mark.parametrize("backend", ["argsort", "topk", "pallas"])
+@pytest.mark.parametrize("backend", ["argsort", "topk", "pallas", "pallas_fused"])
 def test_scan_matches_loop_oracle_all_backends(backend):
     """One fused epoch dispatch ≡ per-node per-tick dispatches, to the bit
     (same (tick, level, node) key folding, same f32 metadata math)."""

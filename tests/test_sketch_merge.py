@@ -129,6 +129,96 @@ def test_quantile_merged_answers_match_concatenated_stream(seed, n_parts):
     assert np.all(np.abs(got - np.asarray(QS)) <= bound), (got, bound)
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_leveled_bound_beats_collapsed_bound_on_long_streams(seed):
+    """Long streams: the leveled sketch's live bound 2·√(Σq²)/W must
+    undercut the collapsed one-buffer bound 2·√U/C for the SAME number
+    of compactions — most compactions happen at low levels where the
+    buffer weight (hence the quantum) is a sliver of the stream — and
+    the realized rank error must stay inside the leveled bound."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    s = sk.quantile_init(CAP)
+    n_up, batch = 48, 96
+    chunks = []
+    for i in range(n_up):
+        b = rng.normal(100, 25, batch).astype(np.float32)
+        chunks.append(b)
+        s = sk.quantile_update(jax.random.fold_in(key, i), s,
+                               jnp.asarray(b), jnp.ones((batch,)))
+    data = np.concatenate(chunks)
+    assert float(s.compactions) > 0
+    collapsed = 2.0 * np.sqrt(float(s.compactions)) / CAP
+    live = float(s.rank_error_bound)
+    assert live < collapsed, (live, collapsed)
+    got = _ranks(data, sk.quantile_query(s, QS))
+    assert np.all(np.abs(got - np.asarray(QS)) <= live + 1.0 / CAP), (
+        got, live)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_quantile_merge_is_levelwise(seed):
+    """Same-schedule merge folds level-by-level: the merged state keeps
+    the [L, C] schedule, both histories' compaction/quantum accounting
+    rides along, and an empty merge is a level-wise no-op — bitwise
+    state identity per level, not just answer identity."""
+    data = _stream(seed, 2000)     # spills well past level 0
+    key = jax.random.PRNGKey(seed)
+    a = _qsketch(jax.random.fold_in(key, 0), data[:1000])
+    b = _qsketch(jax.random.fold_in(key, 1), data[1000:])
+    m = sk.quantile_merge(jax.random.fold_in(key, 2), a, b)
+    assert m.value.shape == a.value.shape == (a.levels, CAP)
+    # histories add (the fold itself may append further compactions)
+    assert float(m.compactions) >= float(a.compactions) + float(b.compactions)
+    assert float(m.err_q2) >= float(a.err_q2) + float(b.err_q2)
+    e = sk.quantile_init(CAP)
+    for m0 in (sk.quantile_merge(jax.random.PRNGKey(1), a, e),
+               sk.quantile_merge(jax.random.PRNGKey(2), e, a)):
+        np.testing.assert_array_equal(np.asarray(m0.value),
+                                      np.asarray(a.value))
+        np.testing.assert_array_equal(np.asarray(m0.weight),
+                                      np.asarray(a.weight))
+        assert float(m0.err_q2) == float(a.err_q2)
+        assert float(m0.compactions) == float(a.compactions)
+
+
+def test_quantile_merge_cross_schedule_flattens():
+    """A summary with a different schedule merges like a weighted batch
+    (flattened into level 0) — answers still land within the merged
+    summary's published bound."""
+    data = _stream(11, 600)
+    a = _qsketch(jax.random.PRNGKey(0), data[:300], cap=CAP)
+    b = _qsketch(jax.random.PRNGKey(1), data[300:], cap=128)
+    assert b.value.shape != a.value.shape
+    m = sk.quantile_merge(jax.random.PRNGKey(2), a, b)
+    assert m.value.shape == a.value.shape
+    np.testing.assert_allclose(float(m.total_weight), len(data), rtol=1e-6)
+    bound = float(m.rank_error_bound) + 1.0 / CAP
+    got = _ranks(data, sk.quantile_query(m, QS))
+    assert np.all(np.abs(got - np.asarray(QS)) <= bound), (got, bound)
+
+
+def test_static_planning_bound_tighter_than_collapsed():
+    """The leveled static planning bound must beat the old collapsed
+    2·√U/C at every deployed capacity, and dominate the live bound a
+    real stream realizes within its horizon."""
+    import math
+    for cap in (64, 256, 1024):
+        old = 2.0 * math.sqrt(64.0) / cap
+        new = sk.quantile_rank_error_bound(cap)
+        assert new < old, (cap, new, old)
+    key = jax.random.PRNGKey(7)
+    rng = np.random.default_rng(7)
+    s = sk.quantile_init(256)
+    for i in range(40):
+        b = jnp.asarray(rng.lognormal(0.0, 1.0, 1024).astype(np.float32))
+        s = sk.quantile_update(jax.random.fold_in(key, i), s, b,
+                               jnp.ones((1024,)))
+    assert float(s.rank_error_bound) <= sk.quantile_rank_error_bound(256)
+
+
 # -------------------------------------------------------- heavy hitters --
 def _hh_stream(seed: int, n: int) -> np.ndarray:
     rng = np.random.default_rng(seed)
