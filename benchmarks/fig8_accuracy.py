@@ -176,6 +176,147 @@ def run() -> list[dict]:
     return rows
 
 
+# --------------------------------------------------------------------------
+# tenant-scale churn sweep (--tenants N --churn): the PR-7 control-plane
+# claim — admit 8 → N tenants onto one tree and show the compile count
+# staying flat (one trace per slot bucket, ≤ ⌈log2(N/8)⌉+1 total) while
+# admit latency stays a state edit and step time stays sublinear in slots.
+# --------------------------------------------------------------------------
+CHURN_CHECKPOINTS = (8, 64, 512, 4096, 10_000)
+
+
+def churn_registry() -> QueryRegistry:
+    """Per-tenant standing queries for the scale sweep: CLT-only
+    (sum+mean) so 10k tenants carry no per-tenant sketch state and the
+    sweep isolates control-plane cost (slots, plan cache, vmap) from
+    sketch memory."""
+    return QueryRegistry().register_sum().register_mean()
+
+
+def churn_run(n_max: int = 10_000, ticks: int = 2) -> list[dict]:
+    import math
+    import time
+
+    import jax
+
+    from repro import api
+    from repro.api.pipeline import program_cache_stats
+    from repro.api.spec import TenantSpec
+    from repro.query.compiler import plan_cache_stats, slot_bucket
+    from repro.runtime.budget import aggregate_tenant_rel_errors
+
+    fanin, n_strata, width = (4, 2, 1), 2, 256
+    tspecs = tuple(churn_registry().specs)
+    tname = "t{:05d}".format
+    spec = api.PipelineSpec(
+        topology=api.TopologySpec(fanin=fanin, capacity=width,
+                                  num_strata=n_strata),
+        sampler=api.SamplerSpec(mode="whs", backend="topk", fraction=0.25),
+        tenants=tuple(TenantSpec(tname(i), tspecs) for i in range(8)),
+        seed=0)
+    rng = np.random.default_rng(0)
+    vals = rng.normal(50.0, 9.0, (ticks, fanin[0], width)).astype(np.float32)
+    strs = rng.integers(0, n_strata,
+                        (ticks, fanin[0], width)).astype(np.int32)
+    counts = np.full((ticks, fanin[0]), width, np.int64)
+
+    p0 = program_cache_stats()["misses"]
+    c0 = plan_cache_stats()["builds"]
+    pipe = api.compile(spec)
+    state = pipe.init()
+    checkpoints = sorted({c for c in (*CHURN_CHECKPOINTS, n_max)
+                          if c <= n_max})
+    rows: list[dict] = []
+    admit_ms: list[float] = []
+
+    def measure(live: int) -> None:
+        nonlocal state
+        # warmup epoch first: compiling this bucket's program is the
+        # one-per-bucket cost the compile column counts, not step time
+        state, _ = pipe.run_epoch(state, pipe.default_key, vals, strs,
+                                  counts)
+        t0 = time.time()
+        state, wa = pipe.run_epoch(state, pipe.default_key, vals, strs,
+                                   counts)
+        jax.block_until_ready(wa.answers)
+        dt = time.time() - t0
+        per = aggregate_tenant_rel_errors(pipe.plan, pipe.rows(wa))
+        n_slots = sum(n for _, n in pipe.plan.core.groups)
+        rows.append({
+            "tenants": live, "n_slots": n_slots,
+            "compiles": program_cache_stats()["misses"] - p0,
+            "plan_cores": plan_cache_stats()["builds"] - c0,
+            "step_ms": dt * 1e3,
+            "step_us_per_tenant": dt / ticks / live * 1e6,
+            "admit_ms_mean": (float(np.mean(admit_ms))
+                              if admit_ms else None),
+            "admit_ms_max": (float(np.max(admit_ms))
+                             if admit_ms else None),
+            "worst_tenant_rel_error": float(max(per.values() or [0.0])),
+        })
+        admit_ms.clear()
+
+    measure(8)
+    live = 8
+    for cp in checkpoints[1:]:
+        while live < cp:
+            t0 = time.time()
+            pipe, state = pipe.admit(state, TenantSpec(tname(live), tspecs))
+            jax.block_until_ready(state.tree.qstate)
+            admit_ms.append((time.time() - t0) * 1e3)
+            live += 1
+        measure(live)
+
+    # churn proper: retire/re-admit inside the top bucket — zero traces
+    p_before = program_cache_stats()["misses"]
+    for i in range(min(16, live - 1)):
+        pipe, state = pipe.retire(state, tname(i))
+    for i in range(min(16, live - 1)):
+        pipe, state = pipe.admit(state, TenantSpec(f"r{i:05d}", tspecs))
+    state, _ = pipe.run_epoch(state, pipe.default_key, vals, strs, counts)
+    churn_recompiles = program_cache_stats()["misses"] - p_before
+
+    compiles = rows[-1]["compiles"]
+    budget_traces = math.ceil(math.log2(max(n_max, 8) / 8)) + 1
+    common.table(f"PR-7 tenant-scale churn sweep (8 → {n_max})", rows)
+    print(f"distinct traced programs across the sweep: {compiles} "
+          f"(bucket budget ⌈log2({n_max}/8)⌉+1 = {budget_traces})")
+    print(f"retire/re-admit x16 inside bucket {slot_bucket(live)}: "
+          f"{churn_recompiles} recompiles")
+    assert compiles <= budget_traces, (compiles, budget_traces)
+    assert churn_recompiles == 0, churn_recompiles
+
+    common.save("fig8_tenant_scale", rows)
+    if n_max >= 10_000:  # smoke runs must not overwrite the headline
+        _record_tenant_bench(rows, n_max, compiles, budget_traces,
+                             churn_recompiles)
+    return rows
+
+
+def _record_tenant_bench(rows: list[dict], n_max: int, compiles: int,
+                         budget_traces: int, churn_recompiles: int) -> None:
+    """Append/refresh the ``pr7-tenant-scale`` entry in BENCH_fig8.json."""
+    payload = {"runs": []}
+    if BENCH_PATH.exists():
+        payload = json.loads(BENCH_PATH.read_text())
+    payload["runs"] = [r for r in payload.get("runs", [])
+                       if r.get("label") != "pr7-tenant-scale"]
+    payload["runs"].append({
+        "label": "pr7-tenant-scale",
+        "notes": "padded-slot control plane: admit 8→%d same-signature "
+                 "tenants (sum+mean each) onto one (4,2,1) tree; compile "
+                 "count = one trace per slot bucket; churn (retire/"
+                 "re-admit x16) recompiles nothing" % n_max,
+        "tenants_max": n_max,
+        "distinct_traces": compiles,
+        "trace_budget": budget_traces,
+        "churn_recompiles": churn_recompiles,
+        "sweep": rows,
+    })
+    BENCH_PATH.write_text(json.dumps(payload, indent=1, default=str))
+    print(f"wrote {BENCH_PATH}")
+
+
 def _record_bench(rows: list[dict], traj: list[dict]) -> None:
     """Append/refresh the headline BENCH_fig8.json trajectory entry."""
     payload = {"runs": []}
@@ -202,4 +343,17 @@ def _record_bench(rows: list[dict], traj: list[dict]) -> None:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=None, metavar="N",
+                    help="with --churn: sweep 8 → N tenants "
+                         "(default 10000)")
+    ap.add_argument("--churn", action="store_true",
+                    help="run the tenant-scale churn sweep instead of "
+                         "the accuracy study")
+    args = ap.parse_args()
+    if args.churn or args.tenants is not None:
+        churn_run(args.tenants or 10_000)
+    else:
+        run()

@@ -31,6 +31,7 @@ N registries, one tree dispatch per epoch.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, NamedTuple
 
@@ -169,8 +170,53 @@ class QueryRouting:
             default_tenant=self.tenant_names[0])
 
 
+# The traced-program cache: every quantity a trace closes over, keyed
+# so pipelines that differ ONLY in tenant names/live sets share one
+# entry (the traced plan component is the canonical, name-free
+# ``SlotPlanCore`` from the size-bucketed plan cache). The tick fn, the
+# per-epoch-length jitted epoch fns, AND the trace counter live here —
+# sharing the jitted callables across pipeline objects is what makes
+# tenant churn zero-retrace: ``admit``/``retire`` build a new
+# ``CompiledPipeline`` wrapper, but it runs the same executables.
+_PROGRAM_CACHE: dict = {}
+_PROGRAM_STATS = {"misses": 0, "hits": 0}
+
+
+def _program_entry(sig: tuple, traced_plan) -> dict:
+    entry = _PROGRAM_CACHE.get(sig)
+    if entry is None:
+        (fanin, capacities, max_sizes, iv, num_strata, allocation,
+         backend, mode, p_level, fraction, _plan) = sig
+        trace_counter = {"traces": 0}
+        tick_fn = T._build_scan_tick(
+            list(fanin), list(capacities), list(max_sizes), list(iv),
+            num_strata, allocation, backend, mode, p_level, fraction,
+            trace_counter=trace_counter, plan=traced_plan)
+        entry = {"tick_fn": tick_fn, "epoch_fns": {},
+                 "trace_counter": trace_counter}
+        _PROGRAM_CACHE[sig] = entry
+        _PROGRAM_STATS["misses"] += 1
+    else:
+        _PROGRAM_STATS["hits"] += 1
+    return entry
+
+
+def program_cache_stats() -> dict:
+    """{"misses": distinct traced-program families built, "hits":
+    reuses} — a miss is (at most) one compile per epoch length; the
+    tenant-churn benchmark asserts misses stay O(log n_tenants)."""
+    return dict(_PROGRAM_STATS)
+
+
 class CompiledPipeline(QueryRouting):
-    """Immutable compilation of one ``PipelineSpec`` (see module doc)."""
+    """Immutable compilation of one ``PipelineSpec`` (see module doc).
+
+    Tenant churn: ``admit(state, tenant)`` / ``retire(state, name)``
+    return a NEW ``(pipeline, state)`` pair — the slot mask and sketch
+    rows are edited in place on device, and the new pipeline reuses the
+    cached traced programs (zero retrace unless the live count crosses
+    a slot-bucket boundary, which fetches/builds the next bucket's
+    cached program)."""
 
     def __init__(self, spec: PipelineSpec):
         r = specmod.resolve(spec)
@@ -183,14 +229,78 @@ class CompiledPipeline(QueryRouting):
         self.interval_ticks = list(r.interval_ticks)
         self.plan = r.plan
         self.tenant_names = tuple(t.name for t in spec.tenants)
-        self.trace_counter = {"traces": 0}
-        self._tick_fn = T._build_scan_tick(
-            self.fanin, self.capacities, self.max_sample_sizes,
-            self.interval_ticks, self.num_strata, spec.sampler.allocation,
-            spec.sampler.backend, spec.sampler.mode, r.p_level,
-            spec.sampler.fraction, trace_counter=self.trace_counter,
-            plan=self.plan)
-        self._epoch_fns: dict[int, Any] = {}
+        self._traced_plan = r.plan.core if r.plan is not None else None
+        self._program_sig = (
+            tuple(self.fanin), tuple(self.capacities),
+            tuple(self.max_sample_sizes), tuple(self.interval_ticks),
+            self.num_strata, spec.sampler.allocation, spec.sampler.backend,
+            spec.sampler.mode, r.p_level, spec.sampler.fraction,
+            self._traced_plan)
+        entry = _program_entry(self._program_sig, self._traced_plan)
+        self.trace_counter = entry["trace_counter"]
+        self._tick_fn = entry["tick_fn"]
+        self._epoch_fns = entry["epoch_fns"]
+
+    # ---------------------------------------------------- tenant churn --
+    def _with_plan(self, plan, tenants) -> "CompiledPipeline":
+        """Cheap clone carrying a new routing wrapper (shared traced
+        programs unless the wrapper's core changed buckets). ``tenants``
+        is the already-edited TenantSpec tuple — reusing the caller's
+        spec objects keeps admit O(live tenants) instead of
+        re-materializing every TenantSpec (O(n) dataclass inits per
+        admit would make a 10k-tenant sweep quadratic)."""
+        pipe = object.__new__(CompiledPipeline)
+        pipe.__dict__.update(self.__dict__)
+        pipe.plan = plan
+        pipe.tenant_names = plan.tenant_names
+        pipe.spec = dataclasses.replace(self.spec, tenants=tuple(tenants))
+        if plan.core is not self._traced_plan:
+            pipe._traced_plan = plan.core
+            pipe._program_sig = self._program_sig[:-1] + (plan.core,)
+            entry = _program_entry(pipe._program_sig, plan.core)
+            pipe.trace_counter = entry["trace_counter"]
+            pipe._tick_fn = entry["tick_fn"]
+            pipe._epoch_fns = entry["epoch_fns"]
+        return pipe
+
+    def admit(self, state: PipelineState, tenant
+              ) -> tuple["CompiledPipeline", PipelineState]:
+        """Hot-admit one tenant mid-stream: returns ``(pipeline',
+        state')`` where ``state'`` has the tenant's slot activated (its
+        sketch rows reset to init) — a pure state edit, no recompile.
+        ``tenant`` is a ``TenantSpec`` (``registry.as_tenant(name)``).
+        The returned pipeline's answers are bitwise what a fresh compile
+        of the same live set would produce from the same state."""
+        if self.plan is None:
+            raise SpecError("admit() needs a tenanted pipeline — compile "
+                            "with at least one TenantSpec")
+        name, specs = tenant.name, tuple(tenant.queries)
+        try:
+            new_plan, transform = self.plan.admit(name, specs)
+        except (KeyError, ValueError) as e:
+            raise SpecError(str(e)) from e
+        qstate = transform(state.tree.qstate, 0)
+        state = state._replace(tree=state.tree._replace(qstate=qstate))
+        return self._with_plan(new_plan,
+                               self.spec.tenants + (tenant,)), state
+
+    def retire(self, state: PipelineState, tenant_id: str
+               ) -> tuple["CompiledPipeline", PipelineState]:
+        """Retire a live tenant: flips its slot's active mask off (the
+        slot is recycled by a later ``admit``). Inactive slots answer
+        zeros, keep frozen state, and never vote in budget arbitration.
+        """
+        if self.plan is None:
+            raise SpecError("retire() needs a tenanted pipeline")
+        try:
+            new_plan, transform = self.plan.retire(tenant_id)
+        except (KeyError, ValueError) as e:
+            raise SpecError(str(e)) from e
+        qstate = transform(state.tree.qstate, 0)
+        state = state._replace(tree=state.tree._replace(qstate=qstate))
+        return self._with_plan(
+            new_plan, tuple(t for t in self.spec.tenants
+                            if t.name != tenant_id)), state
 
     # ------------------------------------------------------------ init --
     @property
@@ -273,6 +383,11 @@ class CompiledPipeline(QueryRouting):
             state, key, b, values, strata, counts)
         if self.plan is not None:
             ts, ok, se, sv, me, mv, nsel, hist, ans, bnd, n_fwd = outs
+            # The traced program answers the PADDED slot vector; the
+            # public vector is the live tenants' blocks (admission
+            # order). Compaction is an eager gather outside the jit, so
+            # it follows churn without retracing anything.
+            ans, bnd = self.plan.compact(ans), self.plan.compact(bnd)
         else:
             ts, ok, se, sv, me, mv, nsel, hist, n_fwd = outs
             ans = bnd = None
@@ -303,14 +418,24 @@ class CompiledPipeline(QueryRouting):
 
 # ------------------------------------------------------- checkpointing --
 def save_state(root, step: int, state: PipelineState, *,
-               spec: PipelineSpec | None = None, keep_n: int = 3):
+               spec: PipelineSpec | None = None,
+               pipeline: "CompiledPipeline | None" = None, keep_n: int = 3):
     """Checkpoint a ``PipelineState`` (atomic, keep-N — see
     ``checkpoint.manager``). ``spec`` rides in the manifest so a restore
-    can verify it is loading into the same pipeline. Save *before*
-    donating the state into ``run_epoch``."""
+    can verify it is loading into the same pipeline; pass ``pipeline=``
+    (preferred) to also record the slot configuration — bucket sizes,
+    active mask, tenant→slot assignment — which a CHURNED pipeline's
+    spec alone cannot reconstruct (retirement leaves slot holes). Save
+    *before* donating the state into ``run_epoch``."""
     from repro.checkpoint import manager
 
+    if pipeline is not None and spec is None:
+        spec = pipeline.spec
     meta = {"pipeline_spec": spec.to_dict()} if spec is not None else {}
+    plan = pipeline.plan if pipeline is not None else (
+        specmod.build_plan(spec) if spec is not None else None)
+    if plan is not None:
+        meta["slots"] = plan.slot_manifest()
     return manager.save(root, step, state, meta=meta, keep_n=keep_n)
 
 
@@ -327,7 +452,10 @@ def restore_state(root, compiled: CompiledPipeline, step: int | None = None
         step = manager.latest_step(root)
         if step is None:
             raise SpecError(f"no pipeline checkpoints under {root!r}")
-    state, meta = manager.restore(root, step, compiled.init())
+    # Peek at the manifest BEFORE materializing the state template —
+    # slot-config mismatches must fail with an actionable error, not a
+    # leaf-shape assertion three layers down.
+    meta = manager.read_manifest(root, step).get("meta", {})
     saved = meta.get("pipeline_spec")
     if saved is not None and saved != compiled.spec.to_dict():
         raise SpecError(
@@ -335,6 +463,20 @@ def restore_state(root, compiled: CompiledPipeline, step: int | None = None
             f"different PipelineSpec — recompile with "
             f"PipelineSpec.from_dict(manifest['pipeline_spec']) or point "
             f"at the right checkpoint directory")
+    saved_slots = meta.get("slots")
+    if saved_slots is not None and compiled.plan is not None:
+        current = compiled.plan.slot_manifest()
+        if saved_slots != current:
+            raise SpecError(
+                f"checkpoint at {root!r} step {step} was written under a "
+                f"different tenant-slot configuration "
+                f"(saved {saved_slots}, pipeline has {current}) — the "
+                f"pipelines churned differently since compile, so "
+                f"restoring would silently mis-route tenant answers. "
+                f"Admit/retire this pipeline to the saved live set (same "
+                f"order) or restore into a pipeline compiled from the "
+                f"checkpoint's spec before any churn.")
+    state, meta = manager.restore(root, step, compiled.init())
     return state, meta
 
 

@@ -215,9 +215,14 @@ class PipelineSpec:
                      f"tenants must be TenantSpec instances, got "
                      f"{type(t).__name__}")
         names = [t.name for t in self.tenants]
-        _require(len(set(names)) == len(names),
-                 f"duplicate tenant names: "
-                 f"{sorted(n for n in names if names.count(n) > 1)}")
+        if len(set(names)) != len(names):  # build the dup list lazily:
+            # an eager f-string here would cost O(n^2) per spec build,
+            # which admit() pays on every churn at 10k tenants
+            import collections
+
+            dups = sorted(n for n, c in
+                          collections.Counter(names).items() if c > 1)
+            _require(False, f"duplicate tenant names: {dups}")
         object.__setattr__(self, "seed", int(self.seed))
         validate(self)
 
@@ -317,7 +322,7 @@ class ResolvedPipeline(NamedTuple):
     interval_ticks: tuple
     capacities: tuple
     p_level: float
-    plan: object   # CompiledQueryPlan | MultiTenantPlan | None
+    plan: object   # SlottedTenantPlan | None
 
 
 def derive_sample_sizes(spec: PipelineSpec) -> tuple[tuple, tuple]:
@@ -356,18 +361,26 @@ def derive_sample_sizes(spec: PipelineSpec) -> tuple[tuple, tuple]:
 
 
 def build_plan(spec: PipelineSpec):
-    """Compile the tenants' registries: ``None`` without tenants, the
-    tenant's own ``CompiledQueryPlan`` for one tenant (bit- and
-    layout-identical to the pre-tenant query plane), a fused
-    ``MultiTenantPlan`` for several."""
+    """Compile the tenants' registries into a ``SlottedTenantPlan``
+    (``None`` without tenants): tenants group by name-free shape
+    signature, each group padded to its slot bucket and evaluated as one
+    vmapped row batch over the cached ``SlotPlanCore``. Every slot's
+    answers are bitwise what the pre-slot fused plans produced, but
+    tenant churn is now a mask/state edit (``CompiledPipeline.admit`` /
+    ``retire``) instead of a recompile."""
     if not spec.tenants:
         return None
-    from repro.query.compiler import CompiledQueryPlan, MultiTenantPlan
+    from repro.query.compiler import build_slotted_plan
 
-    x = spec.topology.num_strata
-    if len(spec.tenants) == 1:
-        return CompiledQueryPlan(spec.tenants[0].queries, x)
-    return MultiTenantPlan([(t.name, t.queries) for t in spec.tenants], x)
+    return build_slotted_plan([(t.name, t.queries) for t in spec.tenants],
+                              spec.topology.num_strata)
+
+
+def slot_bucket(n: int) -> int:
+    """Re-export of the slot bucketing rule (see ``query.compiler``)."""
+    from repro.query.compiler import slot_bucket as _sb
+
+    return _sb(n)
 
 
 def resolve(spec: PipelineSpec) -> ResolvedPipeline:

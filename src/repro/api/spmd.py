@@ -75,6 +75,56 @@ class SpmdPipelineState(NamedTuple):
     qstate: Any
 
 
+# Traced-program cache for the tenant lowering, keyed on everything the
+# shard_map'd epoch closes over — with the plan component being the
+# canonical name-free ``SlotPlanCore``, so tenant churn (admit/retire)
+# and re-compiles of same-shaped specs reuse ONE jitted executable per
+# (mesh, bucket configuration). Mirrors ``api.pipeline._PROGRAM_CACHE``.
+_SPMD_PROGRAM_CACHE: dict = {}
+_SPMD_PROGRAM_STATS = {"misses": 0, "hits": 0}
+
+
+def _spmd_program_entry(mesh, axis_name, core, max_budget, num_strata,
+                        allocation, backend) -> tuple[tuple, dict]:
+    sig = (mesh, axis_name, core, max_budget, num_strata, allocation,
+           backend)
+    entry = _SPMD_PROGRAM_CACHE.get(sig)
+    if entry is not None:
+        _SPMD_PROGRAM_STATS["hits"] += 1
+        return sig, entry
+    _SPMD_PROGRAM_STATS["misses"] += 1
+    sm = _shard_map()
+    rep_kw = _rep_check_kwargs(sm, backend != "pallas")
+    counter = {"traces": 0}
+    parts = spmd_query_epoch_specs(axis_name, core.init_state())
+    state_spec = SpmdPipelineState(tick=parts["replicated"],
+                                   qstate=parts["qstate"])
+    kw = dict(axis_name=axis_name, max_budget=max_budget,
+              num_strata=num_strata, allocation=allocation,
+              sampler_backend=backend)
+
+    def epoch(state, key, budget, batches):
+        counter["traces"] += 1
+        n_ticks = batches.value.shape[0]
+        local_q = jax.tree.map(lambda v: v[0], state.qstate)
+        qfinal, outs = T.spmd_query_plane_epoch(
+            key, state.tick, budget, batches, local_q, core, **kw)
+        ts = state.tick + jnp.arange(n_ticks, dtype=jnp.int32)
+        state2 = SpmdPipelineState(
+            tick=state.tick + jnp.int32(n_ticks),
+            qstate=jax.tree.map(lambda v: v[None], qfinal))
+        return state2, (ts,) + outs
+
+    fn = sm(epoch, mesh=mesh,
+            in_specs=(state_spec, parts["replicated"],
+                      parts["replicated"], parts["batches"]),
+            out_specs=(state_spec, parts["replicated"]), **rep_kw)
+    entry = {"fn": jax.jit(fn, donate_argnums=(0,)),
+             "trace_counter": counter}
+    _SPMD_PROGRAM_CACHE[sig] = entry
+    return sig, entry
+
+
 class CompiledSpmdPipeline(QueryRouting):
     """Immutable SPMD compilation of one ``PipelineSpec`` (see module
     doc for the three lowerings).
@@ -111,35 +161,15 @@ class CompiledSpmdPipeline(QueryRouting):
         if self.plan is not None:
             # Tenant lowering: merged-summary query plane. Spec
             # validation already guarantees mode == "whs" here (tenants
-            # need WHS stratum metadata).
-            parts = spmd_query_epoch_specs(axis_name, self.plan.init_state())
-            state_spec = SpmdPipelineState(tick=parts["replicated"],
-                                           qstate=parts["qstate"])
-            kw = dict(axis_name=axis_name,
-                      max_budget=self.max_local_budget,
-                      num_strata=spec.topology.num_strata,
-                      allocation=spec.sampler.allocation,
-                      sampler_backend=spec.sampler.backend)
-            plan = self.plan
-            counter = self.trace_counter
-
-            def epoch(state, key, budget, batches):
-                counter["traces"] += 1
-                n_ticks = batches.value.shape[0]
-                local_q = jax.tree.map(lambda v: v[0], state.qstate)
-                qfinal, outs = T.spmd_query_plane_epoch(
-                    key, state.tick, budget, batches, local_q, plan, **kw)
-                ts = state.tick + jnp.arange(n_ticks, dtype=jnp.int32)
-                state2 = SpmdPipelineState(
-                    tick=state.tick + jnp.int32(n_ticks),
-                    qstate=jax.tree.map(lambda v: v[None], qfinal))
-                return state2, (ts,) + outs
-
-            fn = sm(epoch, mesh=mesh,
-                    in_specs=(state_spec, parts["replicated"],
-                              parts["replicated"], parts["batches"]),
-                    out_specs=(state_spec, parts["replicated"]), **rep_kw)
-            self._fn = jax.jit(fn, donate_argnums=(0,))
+            # need WHS stratum metadata). The traced epoch closes over
+            # the name-free slot CORE and is fetched from the program
+            # cache, so churned pipelines reuse the executable.
+            self._program_sig, entry = _spmd_program_entry(
+                mesh, axis_name, self.plan.core, self.max_local_budget,
+                spec.topology.num_strata, spec.sampler.allocation,
+                spec.sampler.backend)
+            self._fn = entry["fn"]
+            self.trace_counter = entry["trace_counter"]
         elif spec.sampler.mode == "srs":
             in_specs, out_specs = spmd_epoch_specs(axis_name)
             frac = float(spec.sampler.fraction)
@@ -164,6 +194,62 @@ class CompiledSpmdPipeline(QueryRouting):
                     mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                     **rep_kw)
             self._fn = jax.jit(fn)
+
+    # ---------------------------------------------------- tenant churn --
+    def _with_plan(self, plan, tenants) -> "CompiledSpmdPipeline":
+        import dataclasses
+
+        pipe = object.__new__(CompiledSpmdPipeline)
+        pipe.__dict__.update(self.__dict__)
+        pipe.plan = plan
+        pipe.tenant_names = plan.tenant_names
+        # reuse the caller's TenantSpec objects: admit stays O(live)
+        pipe.spec = dataclasses.replace(self.spec, tenants=tuple(tenants))
+        if plan.core is not self.plan.core:
+            # bucket boundary crossed: fetch/build the next bucket's
+            # cached executable (same mesh, same statics, CHURNED core)
+            pipe._program_sig, entry = _spmd_program_entry(
+                self.mesh, self.axis_name, plan.core,
+                self.max_local_budget, self.spec.topology.num_strata,
+                self.spec.sampler.allocation, self.spec.sampler.backend)
+            pipe._fn = entry["fn"]
+            pipe.trace_counter = entry["trace_counter"]
+        return pipe
+
+    def admit(self, state, tenant
+              ) -> tuple["CompiledSpmdPipeline", "SpmdPipelineState"]:
+        """Mesh-path hot admission: edits every device's slot row
+        (``[n_devices, n_slots, ...]`` leaves at ``[:, slot]``) and the
+        replicated-in-content active mask — a pure sharded-state edit;
+        the shard_map'd epoch executable is reused from the program
+        cache."""
+        if self.plan is None:
+            raise SpecError("admit() needs a tenanted pipeline — compile "
+                            "with at least one TenantSpec")
+        try:
+            new_plan, transform = self.plan.admit(tenant.name,
+                                                  tuple(tenant.queries))
+        except (KeyError, ValueError) as e:
+            raise SpecError(str(e)) from e
+        qstate = transform(state.qstate, 1)    # axis 0 = device
+        return (self._with_plan(new_plan, self.spec.tenants + (tenant,)),
+                state._replace(qstate=qstate))
+
+    def retire(self, state, tenant_id: str
+               ) -> tuple["CompiledSpmdPipeline", "SpmdPipelineState"]:
+        """Mesh-path retirement: flips the slot's mask bit on every
+        device; state freezes, the slot recycles on a later admit."""
+        if self.plan is None:
+            raise SpecError("retire() needs a tenanted pipeline")
+        try:
+            new_plan, transform = self.plan.retire(tenant_id)
+        except (KeyError, ValueError) as e:
+            raise SpecError(str(e)) from e
+        qstate = transform(state.qstate, 1)
+        return (self._with_plan(
+            new_plan, tuple(t for t in self.spec.tenants
+                            if t.name != tenant_id)),
+            state._replace(qstate=qstate))
 
     @property
     def default_key(self) -> jax.Array:
@@ -232,6 +318,9 @@ class CompiledSpmdPipeline(QueryRouting):
         b = jnp.float32(self.clamp_budgets(budgets))
         state, outs = self._fn(state, key, b, batches)
         ts, ok, se, sv, me, mv, nsel, hist, ans, bnd = outs
+        # padded slot vector → public live-tenant vector (eager gather
+        # outside the jit — follows churn with zero retraces)
+        ans, bnd = self.plan.compact(ans), self.plan.compact(bnd)
         wa = WindowAnswers(
             tick=ts, ok=ok, sum=se, sum_var=sv, mean=me, mean_var=mv,
             n_sampled=nsel, histogram=hist, answers=ans, bounds=bnd,

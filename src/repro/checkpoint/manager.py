@@ -81,6 +81,16 @@ def latest_step(root: str | pathlib.Path) -> int | None:
     return max(steps) if steps else None
 
 
+def read_manifest(root: str | pathlib.Path, step: int) -> dict:
+    """Read a step's manifest WITHOUT materializing any leaves — callers
+    (e.g. ``api.pipeline.restore_state``) validate recorded metadata
+    (pipeline spec, tenant-slot configuration) before committing to the
+    leaf-by-leaf template restore, so a mismatched checkpoint fails with
+    an actionable error instead of a shape assertion."""
+    path = pathlib.Path(root) / f"step_{step:09d}"
+    return json.loads((path / "manifest.json").read_text())
+
+
 def restore(root: str | pathlib.Path, step: int, target_tree, *, shardings=None):
     """Load into the structure of ``target_tree`` (shape/dtype template).
     With ``shardings`` (matching pytree of NamedSharding), leaves are

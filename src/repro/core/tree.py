@@ -719,8 +719,18 @@ class HostTree:
         self.sampler_backend = sampler_backend
         self.fraction = fraction
         if queries is not None and not hasattr(queries, "evaluate"):
-            queries = queries.compile(num_strata)
+            # Raw QueryRegistry: build the same slotted single-tenant
+            # plan the API front door compiles, so legacy-constructed
+            # trees stay bitwise interchangeable with spec-built ones
+            # (same padded traced program, same compacted public rows).
+            from repro.query.compiler import build_slotted_plan
+
+            queries = build_slotted_plan((("default", queries.specs),),
+                                         num_strata)
         self.plan = queries
+        # Traced programs close over the name-free core when the plan is
+        # slotted (tenant routing is host-side only).
+        self._traced_plan = getattr(queries, "core", queries)
         assert self.plan is None or mode == "whs", \
             "the query plane needs WHS stratum metadata (mode='whs')"
         # SRS keeps items with the same probability at every level so the
@@ -756,7 +766,8 @@ class HostTree:
             self._tick_fn = _build_scan_tick(
                 fanin, self.capacities, self.max_sample_sizes, interval_ticks,
                 num_strata, allocation, sampler_backend, mode, self.p_level,
-                fraction, trace_counter=self._trace_counter, plan=self.plan)
+                fraction, trace_counter=self._trace_counter,
+                plan=self._traced_plan)
             self._epoch_fns: dict[int, object] = {}
         if engine != "scan" and self.plan is not None:
             # level/loop engines: host-threaded sketch state + a dedicated
@@ -857,6 +868,8 @@ class HostTree:
         if self.plan is not None:
             (root_ok, se, sv, me, mv, nsel, hist, ans, bnd, n_fwd) = (
                 np.asarray(o) for o in outs)      # one device→host sync
+            if hasattr(self.plan, "compact"):
+                ans, bnd = self.plan.compact(ans), self.plan.compact(bnd)
         else:
             (root_ok, se, sv, me, mv, nsel, hist, n_fwd) = (
                 np.asarray(o) for o in outs)
@@ -905,8 +918,10 @@ class HostTree:
                    mean=float(me), mean_var=float(mv), n_sampled=int(nsel),
                    histogram=np.asarray(hist))
         if len(outs) > 6:
-            row["answers"] = np.asarray(outs[6])
-            row["bounds"] = np.asarray(outs[7])
+            ans, bnd = np.asarray(outs[6]), np.asarray(outs[7])
+            if self.plan is not None and hasattr(self.plan, "compact"):
+                ans, bnd = self.plan.compact(ans), self.plan.compact(bnd)
+            row["answers"], row["bounds"] = ans, bnd
         return row
 
     # ------------------------------------------------------------- loop --

@@ -290,18 +290,29 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
         if controller is None or not new_windows:
             return
         if hasattr(controller, "last_tenant"):     # WorstTenantArbiter
-            size, per = controller.update_from_windows(tree.plan,
-                                                       new_windows)
+            from repro.runtime.budget import (aggregate_tenant_rel_errors,
+                                              level_error_shares)
+
+            per = aggregate_tenant_rel_errors(tree.plan, new_windows)
+            # Per-level attribution: split the worst tenant's error
+            # across levels by measured (1-f)/f variance shares, so the
+            # controller moves only the levels that dominate the error.
+            ins = [tree.items_ingested] + list(tree.items_forwarded[:-1])
+            shares = level_error_shares(ins, tree.items_forwarded)
+            sizes = controller.update_levels(per, shares)
             entry = dict(step=step, rel_error=max(per.values() or [0.0]),
-                         size=size, tenant=controller.last_tenant,
+                         size=max(sizes), sizes=list(sizes),
+                         level_shares=[round(float(s), 6) for s in shares],
+                         tenant=controller.last_tenant,
                          tenant_rel_errors=per)
         else:
             rels = [_window_rel_error(w, tree.plan) for w in new_windows]
             rel = float(np.mean([r for r in rels if np.isfinite(r)]
                                 or [0.0]))
             size = controller.update(rel_error=rel)
+            sizes = [size] * len(tree.fanin)
             entry = dict(step=step, rel_error=rel, size=size)
-        tree.set_sample_sizes([size] * len(tree.fanin))
+        tree.set_sample_sizes(sizes)
         trajectory.append(entry)
 
     if engine == "scan":

@@ -69,6 +69,15 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-len", type=int, default=16)
     ap.add_argument("--telemetry-fraction", type=float, default=0.25)
+    ap.add_argument("--hot-admit", action="store_true",
+                    help="demo tenant churn on the live telemetry plane "
+                         "(local path): serve half the epoch with the "
+                         "dashboard tenant only, hot-admit an 'slo' "
+                         "tenant mid-stream (a state edit, not a "
+                         "recompile), answer its queries over the second "
+                         "half, then retire + re-admit it and print the "
+                         "zero-retrace evidence from the plan/program "
+                         "caches")
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
                     help="run the telemetry plane on an N-device 'data' "
                          "mesh (repro.api.compile(spec, mesh=...)): each "
@@ -146,13 +155,58 @@ def main(argv=None):
         state = pipe.init()
         batch = S.ticks_to_ingest(tick_records, n_nodes=EDGE_NODES,
                                   width=capacity)
-        state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
-                                   batch.strata, batch.counts)
-    rows = pipe.rows(wa)
-    a = lambda name, row: pipe.answer(row["answers"], name,
-                                      tenant="dashboard")
-    bnd = lambda name, row: pipe.answer(row["bounds"], name,
-                                        tenant="dashboard")
+        if args.hot_admit:
+            from repro.api.pipeline import program_cache_stats
+
+            h = max(1, len(tick_records) // 2)
+            state, waA = pipe.run_epoch(state, pipe.default_key,
+                                        batch.values[:h], batch.strata[:h],
+                                        batch.counts[:h])
+            rows_a = pipe.rows(waA)
+            m0 = program_cache_stats()["misses"]
+            slo = (QueryRegistry().register_count("n")
+                   .register_mean("mean_ms")
+                   .register_quantile("p999_ms", qs=(0.999,), capacity=128)
+                   .as_tenant("slo"))
+            # hot admit: slot edit on the carried state, answers resume
+            # mid-stream — the dashboard tenant's sketches are untouched
+            pipe2, state = pipe.admit(state, slo)
+            state, waB = pipe2.run_epoch(state, pipe2.default_key,
+                                         batch.values[h:], batch.strata[h:],
+                                         batch.counts[h:])
+            rows_b = pipe2.rows(waB)
+            m1 = program_cache_stats()["misses"]
+            pipe3, state = pipe2.retire(state, "slo")
+            pipe4, state = pipe3.admit(state, slo)
+            m2 = program_cache_stats()["misses"]
+            last_b = rows_b[-1]
+            slo_n = float(sum(pipe2.answer(r["answers"], "n", tenant="slo")[0]
+                              for r in rows_b))
+            p999 = float(pipe2.answer(last_b["answers"], "p999_ms",
+                                      tenant="slo")[0])
+            print(f"hot-admit 'slo' tenant after {h}/{len(tick_records)} "
+                  f"ticks: {len(rows_b)} windows answered mid-stream "
+                  f"({slo_n:.0f} requests seen, p99.9 ≈ {p999:.2f} ms)")
+            print(f"  churn cost: admit into a new slot group traced "
+                  f"{m1 - m0} program(s); retire + re-admit into the warm "
+                  f"slot traced {m2 - m1} (plan cache: "
+                  f"{program_cache_stats()['hits']} hits)")
+            rows = rows_a + rows_b
+            row_pipes = [pipe] * len(rows_a) + [pipe2] * len(rows_b)
+            pipe = pipe4
+        else:
+            state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
+                                       batch.strata, batch.counts)
+    if not (args.hot_admit and not args.mesh):
+        rows = pipe.rows(wa)
+        row_pipes = [pipe] * len(rows)
+    # rows from before/after a hot admit carry different layouts — answer
+    # each row through the pipeline that produced it
+    pipe_of = {id(r): p for p, r in zip(row_pipes, rows)}
+    a = lambda name, row: pipe_of[id(row)].answer(row["answers"], name,
+                                                  tenant="dashboard")
+    bnd = lambda name, row: pipe_of[id(row)].answer(row["bounds"], name,
+                                                    tenant="dashboard")
 
     # CLT queries aggregate across windows; the quantile sketch is
     # continuous (its state spans the whole epoch), so the last window

@@ -25,6 +25,8 @@ bit-identical to a run with no queries registered (asserted in
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -382,6 +384,413 @@ class MultiTenantPlan:
                                for p in self.plans])
 
 
+def slot_bucket(n: int) -> int:
+    """Smallest power-of-two slot count ≥ n. Buckets are what keep the
+    compile count flat under churn: a group only retraces when its LIVE
+    tenant count crosses a power of two, so an 8→10k admit sweep costs
+    ⌈log2(10k/8)⌉+1 = 12 distinct traces, not 10k. No floor: small
+    deployments pay zero padding (a 1-tenant group vmaps over 1 slot, so
+    per-window compute and cross-device summary bytes match the unslotted
+    plan exactly); padding waste is bounded at <2x live tenants at every
+    scale."""
+    n = max(int(n), 1)
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def canonical_signature(specs) -> tuple[QuerySpec, ...]:
+    """Name-free shape signature of a registry: the specs with names
+    canonicalized to ``q0, q1, ...``. Two tenants share a signature iff
+    their registries are identical up to query names — exactly the
+    condition under which their root evaluations are the same traced
+    program and can share one vmapped slot group."""
+    return tuple(dataclasses.replace(sp, name=f"q{i}")
+                 for i, sp in enumerate(specs))
+
+
+class SlotPlanCore:
+    """The TRACED half of the slotted tenant plan: per shape-signature
+    group, one canonical template ``CompiledQueryPlan`` evaluated via
+    ``jax.vmap`` over ``n_slots`` stacked sketch-state rows plus a
+    per-slot active mask. Tenant NAMES never enter this object — routing
+    lives on the cheap host-side ``SlottedTenantPlan`` wrapper — so one
+    core (and one trace of everything closing over it) serves every
+    pipeline whose live set maps onto the same (signature, bucket)s.
+
+    Masking semantics (all verified bitwise): an active slot's answers
+    and state updates are untouched by ``jnp.where(True, new, old)``;
+    an inactive slot freezes at its current state and answers zeros.
+    ``vmap`` row evaluation is bitwise row-position-independent, so a
+    slot's answers don't depend on which slot it is, what the other
+    slots hold, or the bucket size — the foundation of the
+    churn ≡ fresh-compile equivalence law.
+
+    The vmap is also the perf story: batch/res/key are unbatched, so
+    the shared ``stratum_moments`` pass (and every other slot-
+    independent intermediate) is computed ONCE per window; the per-slot
+    marginal cost is just the answer assembly + sketch fold."""
+
+    def __init__(self, groups, num_strata: int):
+        """``groups``: ordered ``(canonical_specs, n_slots)`` pairs."""
+        self.num_strata = int(num_strata)
+        self.groups = tuple((CompiledQueryPlan(sig, num_strata), int(n))
+                            for sig, n in groups)
+        self._offsets = []
+        off = 0
+        for tmpl, n in self.groups:
+            self._offsets.append(off)
+            off += n * tmpl.n_out
+        self.n_out = off
+
+    def group_offset(self, gi: int) -> int:
+        return self._offsets[gi]
+
+    def init_state(self) -> tuple:
+        """All slots inactive, all rows at the template's init state."""
+        out = []
+        for tmpl, n in self.groups:
+            row = tmpl.init_state()
+            stacked = jax.tree.map(
+                lambda v: jnp.broadcast_to(v, (n,) + v.shape).copy(), row)
+            out.append((jnp.zeros((n,), bool), stacked))
+        return tuple(out)
+
+    def _eval(self, key, batch, res, state, eval_one):
+        states, outs, bnds = [], [], []
+        for (tmpl, _n), (mask, st) in zip(self.groups, state):
+            def row(m_, s_, tmpl=tmpl):
+                s2, a, b = eval_one(tmpl, key, batch, res, s_)
+                a = jnp.where(m_, a, 0.0)
+                b = jnp.where(m_, b, 0.0)
+                s2 = jax.tree.map(lambda nw, old: jnp.where(m_, nw, old),
+                                  s2, s_)
+                return s2, a, b
+            s2, a, b = jax.vmap(row)(mask, st)
+            states.append((mask, s2))
+            outs.append(a.reshape(-1))
+            bnds.append(b.reshape(-1))
+        return tuple(states), jnp.concatenate(outs), jnp.concatenate(bnds)
+
+    def evaluate(self, key: jax.Array, batch: IntervalBatch,
+                 res: SampleResult, state: tuple) -> tuple:
+        return self._eval(key, batch, res, state,
+                          lambda p, k, b, r, s: p.evaluate(k, b, r, s))
+
+    def evaluate_spmd(self, key: jax.Array, batch: IntervalBatch,
+                      res: SampleResult, state: tuple,
+                      axis_name: str) -> tuple:
+        # collectives-under-vmap: psum/all_gather batch fine inside
+        # shard_map, so the mesh path vmaps over slots identically.
+        return self._eval(
+            key, batch, res, state,
+            lambda p, k, b, r, s: p.evaluate_spmd(k, b, r, s, axis_name))
+
+
+# Canonical SlotPlanCore per (num_strata, ((signature, n_slots), ...)) —
+# THE size-bucketed plan cache. Everything traced (tick fns, epoch fns,
+# SPMD epoch fns) closes over the core object, so a cache hit here means
+# jit cache hits everywhere downstream: admitting tenant #513 into an
+# existing 1024-bucket reuses the 1024-bucket programs verbatim.
+_CORE_CACHE: dict = {}
+_CORE_STATS = {"builds": 0, "hits": 0}
+
+
+def slot_plan_core(groups, num_strata: int) -> SlotPlanCore:
+    key = (int(num_strata), tuple((tuple(sig), int(n)) for sig, n in groups))
+    core = _CORE_CACHE.get(key)
+    if core is None:
+        core = SlotPlanCore(groups, num_strata)
+        _CORE_CACHE[key] = core
+        _CORE_STATS["builds"] += 1
+    else:
+        _CORE_STATS["hits"] += 1
+    return core
+
+
+def plan_cache_stats() -> dict:
+    """{"builds": distinct traced plan shapes, "hits": cache reuses}."""
+    return dict(_CORE_STATS)
+
+
+class SlottedTenantPlan:
+    """Host-side routing wrapper over a cached ``SlotPlanCore``: maps
+    live tenant names to (group, slot) and answers layout/slicing
+    queries. Construction is cheap (no tracing) and instances are
+    IMMUTABLE — ``admit``/``retire`` return a new wrapper plus a pure
+    qstate transform, never touching the shared core.
+
+    Two answer-vector coordinate systems meet here. The TRACED programs
+    produce the PADDED vector (``core.n_out`` — every slot, inactive
+    ones zero); the PUBLIC vector is compacted to the live tenants'
+    blocks in admission order (``n_out``, ``layout()``,
+    ``tenant_slice`` — bit-for-bit the pre-slot ``MultiTenantPlan``
+    layout, so every consumer reads it unchanged). ``compact(arr)``
+    maps padded → public with one eager gather at the host boundary —
+    OUTSIDE the jit, so churn moves the gather columns without
+    retracing anything.
+
+    Duck-types the plan protocol (``evaluate``/``evaluate_spmd``/
+    ``init_state``/``layout``/``answer``/``tenant_slice``), so every
+    engine and every ``MultiTenantPlan`` consumer accepts it unchanged.
+    With a single live tenant, ``layout()`` uses plain query names
+    (PR 4 behavior); with several, ``"tenant/query"``."""
+
+    def __init__(self, core: SlotPlanCore, entries):
+        """``entries``: ordered ``(name, specs, group_idx, slot_idx)``."""
+        self.core = core
+        self.entries = tuple(entries)
+        self.num_strata = core.num_strata
+        self.tenant_names = tuple(e[0] for e in self.entries)
+        if len(set(self.tenant_names)) != len(self.tenant_names):
+            ns = list(self.tenant_names)
+            dup = sorted({n for n in ns if ns.count(n) > 1})
+            raise ValueError(f"duplicate tenant names: {dup}")
+        self._by_name = {e[0]: e for e in self.entries}
+        self._plan_cache: dict = {}
+        self._slices = {}
+        off = 0
+        for name, _, gi, _si in self.entries:
+            w = core.groups[gi][0].n_out
+            self._slices[name] = (off, w)
+            off += w
+        self.n_out = off            # PUBLIC (compacted) width
+        self._cols = None           # lazy padded→public column map
+
+    @property
+    def k(self) -> int:
+        return sum(len(e[1]) for e in self.entries)
+
+    @property
+    def plans(self) -> tuple:
+        """Per-live-tenant template plans (host-side views)."""
+        return tuple(self.plan_for(t) for t in self.tenant_names)
+
+    def plan_for(self, tenant: str) -> CompiledQueryPlan:
+        if tenant not in self._by_name:
+            raise KeyError(f"unknown tenant {tenant!r}; "
+                           f"registered: {list(self.tenant_names)}")
+        if tenant not in self._plan_cache:
+            self._plan_cache[tenant] = CompiledQueryPlan(
+                self._by_name[tenant][1], self.num_strata)
+        return self._plan_cache[tenant]
+
+    def padded_slice(self, tenant: str) -> tuple[int, int]:
+        """(offset, width) of one tenant's slot block in the PADDED
+        (traced) answer vector."""
+        _, _, gi, si = self._by_name[tenant]
+        tmpl, _n = self.core.groups[gi]
+        return self.core.group_offset(gi) + si * tmpl.n_out, tmpl.n_out
+
+    def tenant_slice(self, tenant: str) -> tuple[int, int]:
+        """(offset, width) of one tenant's block in the flat PUBLIC
+        (compacted) answer vector — live blocks in admission order."""
+        if tenant not in self._slices:
+            raise KeyError(f"unknown tenant {tenant!r}; "
+                           f"registered: {list(self.tenant_names)}")
+        return self._slices[tenant]
+
+    def live_columns(self) -> np.ndarray:
+        """Padded-vector column index of every public-vector slot."""
+        if self._cols is None:
+            cols = []
+            for name in self.tenant_names:
+                o, w = self.padded_slice(name)
+                cols.extend(range(o, o + w))
+            self._cols = np.asarray(cols, np.int32)
+        return self._cols
+
+    def compact(self, arr):
+        """Gather a padded answers/bounds array down to the public
+        (live-tenant) vector along the last axis. Eager — never traced,
+        so the column map follows churn with zero retraces."""
+        if arr is None:
+            return None
+        return arr[..., self.live_columns()]
+
+    def layout(self) -> dict[str, tuple[int, int, str]]:
+        out = {}
+        single = len(self.tenant_names) == 1
+        for name in self.tenant_names:
+            base, _ = self.tenant_slice(name)
+            for q, (o, w, kind) in self.plan_for(name).layout().items():
+                label = q if single else f"{name}/{q}"
+                out[label] = (base + o, w, kind)
+        return out
+
+    def answer(self, vec: np.ndarray, name: str) -> np.ndarray:
+        o, w, _ = self.layout()[name]
+        return np.asarray(vec)[..., o:o + w]
+
+    def tenant_answers(self, vec: np.ndarray, tenant: str) -> np.ndarray:
+        o, w = self.tenant_slice(tenant)
+        return np.asarray(vec)[..., o:o + w]
+
+    def init_state(self) -> tuple:
+        """Core init state with this wrapper's live slots activated."""
+        state = list(self.core.init_state())
+        for _, _, gi, si in self.entries:
+            mask, st = state[gi]
+            state[gi] = (mask.at[si].set(True), st)
+        return tuple(state)
+
+    def evaluate(self, key, batch, res, state):
+        return self.core.evaluate(key, batch, res, state)
+
+    def evaluate_spmd(self, key, batch, res, state, axis_name):
+        return self.core.evaluate_spmd(key, batch, res, state, axis_name)
+
+    def exact_answers(self, values, strata=None) -> np.ndarray:
+        """Host-side exact answers in the PUBLIC (compacted) layout."""
+        return np.concatenate([self.plan_for(t).exact_answers(values, strata)
+                               for t in self.tenant_names])
+
+    # ------------------------------------------------------- manifest --
+    def slot_manifest(self) -> dict:
+        """JSON-able description of the slot configuration — what the
+        checkpoint manifest records so a restore into a differently-
+        churned pipeline fails loudly instead of mis-routing answers."""
+        groups = []
+        for gi, (tmpl, n) in enumerate(self.core.groups):
+            sig = [f"{sp.kind}:{sp.out_width}" for sp in tmpl.specs]
+            slots = {name: si for name, _, g, si in self.entries if g == gi}
+            groups.append({"signature": sig, "n_slots": int(n),
+                           "slots": slots})
+        return {"groups": groups}
+
+    # ---------------------------------------------------- admit/retire --
+    def admit(self, name: str, specs) -> tuple:
+        """Returns ``(new_plan, transform)`` where ``transform(qstate,
+        slot_axis)`` edits the state pytree: activates the new tenant's
+        slot (resetting its row to init) and, when the signature's
+        bucket is full, pads the group to the next bucket. Pure state
+        edits — the only retrace is a bucket-cache MISS on growth."""
+        name = str(name)
+        specs = tuple(specs)
+        if name in self._by_name:
+            raise ValueError(f"tenant {name!r} already admitted")
+        if not specs:
+            raise ValueError(f"tenant {name!r} has an empty registry")
+        sig = canonical_signature(specs)
+        groups = [(tuple(t.specs), n) for t, n in self.core.groups]
+        gi = next((i for i, (s, _) in enumerate(groups) if s == sig), None)
+        if gi is None:
+            # new signature: append a fresh minimum-bucket group
+            gi, si = len(groups), 0
+            groups.append((sig, slot_bucket(1)))
+            core = slot_plan_core(groups, self.num_strata)
+            tmpl, n = core.groups[gi]
+            row = tmpl.init_state()
+
+            def transform(qstate, slot_axis=0):
+                lead = _lead_shape(qstate, slot_axis)
+                mask = jnp.zeros(lead + (n,), bool).at[..., 0].set(True)
+                st = jax.tree.map(
+                    lambda v: jnp.broadcast_to(
+                        v, lead + (n,) + v.shape).copy(), row)
+                return tuple(qstate) + ((mask, st),)
+        else:
+            used = {e[3] for e in self.entries if e[2] == gi}
+            n_now = groups[gi][1]
+            free = [s for s in range(n_now) if s not in used]
+            if free:
+                si, core, grow = free[0], self.core, 0
+            else:
+                si, grow = n_now, n_now  # first slot of the padding
+                groups[gi] = (sig, n_now * 2)
+                core = slot_plan_core(groups, self.num_strata)
+            tmpl, _n = core.groups[gi]
+            row = tmpl.init_state()
+
+            def transform(qstate, slot_axis=0, gi=gi, si=si, grow=grow):
+                qstate = list(qstate)
+                mask, st = qstate[gi]
+                if grow:
+                    pad = jax.tree.map(
+                        lambda v: jnp.broadcast_to(
+                            v, mask.shape[:slot_axis] + (grow,) + v.shape
+                        ).copy(), row)
+                    st = jax.tree.map(
+                        lambda a, p: jnp.concatenate([a, p], axis=slot_axis),
+                        st, pad)
+                    mask = jnp.concatenate(
+                        [mask, jnp.zeros(mask.shape[:slot_axis] + (grow,),
+                                         bool)], axis=slot_axis)
+                idx = (slice(None),) * slot_axis + (si,)
+                mask = mask.at[idx].set(True)
+                # reset the slot's row: it may hold a retired tenant's
+                # frozen sketch, and admission must match fresh compile.
+                st = jax.tree.map(lambda a, v: a.at[idx].set(v), st, row)
+                qstate[gi] = (mask, st)
+                return tuple(qstate)
+
+        entries = self.entries + ((name, specs, gi, si),)
+        return SlottedTenantPlan(core, entries), transform
+
+    def retire(self, name: str) -> tuple:
+        """Returns ``(new_plan, transform)``: flips the slot's mask bit
+        off. The row's state freezes in place (never shrinks a bucket —
+        shrinking would retrace; the slot is reused by a later admit)."""
+        if name not in self._by_name:
+            raise KeyError(f"unknown tenant {name!r}; "
+                           f"registered: {list(self.tenant_names)}")
+        if len(self.entries) == 1:
+            raise ValueError(
+                f"cannot retire {name!r}: it is the last live tenant")
+        _, _, gi, si = self._by_name[name]
+        entries = tuple(e for e in self.entries if e[0] != name)
+
+        def transform(qstate, slot_axis=0):
+            qstate = list(qstate)
+            mask, st = qstate[gi]
+            idx = (slice(None),) * slot_axis + (si,)
+            qstate[gi] = (mask.at[idx].set(False), st)
+            return tuple(qstate)
+
+        return SlottedTenantPlan(self.core, entries), transform
+
+
+def _lead_shape(qstate, slot_axis: int) -> tuple:
+    """Leading (device) axes of the state layout, read off the first
+    group's mask — ``()`` locally, ``(n_devices,)`` on the mesh."""
+    if not qstate or slot_axis == 0:
+        return ()
+    return qstate[0][0].shape[:slot_axis]
+
+
+def build_slotted_plan(tenants, num_strata: int) -> SlottedTenantPlan:
+    """Group tenants by canonical shape signature, pad each group to its
+    slot bucket, and wrap the cached core with name routing. Slots are
+    assigned in admission order within each group, so a fresh compile of
+    any live set is the canonical slot assignment churn must match."""
+    tenants = tuple((str(n), tuple(specs)) for n, specs in tenants)
+    if not tenants:
+        raise ValueError("cannot compile an empty tenant list")
+    sigs: list = []
+    members: list = []
+    for name, specs in tenants:
+        sig = canonical_signature(specs)
+        try:
+            gi = sigs.index(sig)
+        except ValueError:
+            gi = len(sigs)
+            sigs.append(sig)
+            members.append([])
+        members[gi].append(name)
+    groups = tuple((sig, slot_bucket(len(m)))
+                   for sig, m in zip(sigs, members))
+    core = slot_plan_core(groups, num_strata)
+    by_name = dict(tenants)
+    entries = []
+    slot_of = {name: (gi, si)
+               for gi, m in enumerate(members) for si, name in enumerate(m)}
+    for name, specs in tenants:
+        gi, si = slot_of[name]
+        entries.append((name, specs, gi, si))
+    return SlottedTenantPlan(core, tuple(entries))
+
+
 def tenant_rel_errors(plan, answers_row, bounds_row,
                       default_tenant: str = "default") -> dict[str, float]:
     """Per-tenant measured relative error of one window: the WORST
@@ -400,7 +809,8 @@ def tenant_rel_errors(plan, answers_row, bounds_row,
     for name, (off, _, kind) in plan.layout().items():
         if kind not in ("sum", "mean"):
             continue
-        tenant = name.split("/", 1)[0] if multi else names[0]
+        tenant = name.split("/", 1)[0] if (multi and "/" in name) \
+            else names[0]
         est = abs(float(answers_row[..., off]))
         rel = float(bounds_row[..., off]) / max(est, 1e-9)
         out[tenant] = max(out[tenant], rel)

@@ -128,6 +128,16 @@ class QueryRegistry:
 
         return compiler.CompiledQueryPlan(self.specs, num_strata)
 
+    def shape_signature(self) -> tuple[QuerySpec, ...]:
+        """Name-free signature (names canonicalized to ``q0, q1, ...``).
+        Tenants whose registries share a signature evaluate as rows of
+        ONE vmapped slot group in the slotted tenant plan — admitting
+        another such tenant reuses the traced program instead of
+        compiling a new one."""
+        from repro.query import compiler
+
+        return compiler.canonical_signature(self.specs)
+
     def as_tenant(self, name: str):
         """Wrap this registry as one ``repro.api`` pipeline tenant: N
         tenants' registries share one tree (a single batched root

@@ -50,6 +50,30 @@ class BudgetController:
         return int(self.size)
 
 
+def level_error_shares(items_in, items_kept) -> list[float]:
+    """Per-level share of the pipeline's sampling-induced variance.
+
+    A sampling stage that keeps fraction ``f`` of its input inflates
+    estimator variance by ~``(1-f)/f`` (the HT/SRS second-moment
+    scaling), so a level's share of the end-to-end error is its
+    normalized ``(1-f)/f``. Levels that forward everything (``f=1``)
+    contribute 0; with no subsampling anywhere (or no traffic yet) the
+    shares are uniform — there is nothing to attribute, so the arbiter
+    degenerates to the legacy all-levels-together behaviour."""
+    contrib = []
+    for n_in, n_kept in zip(items_in, items_kept):
+        n_in = max(float(n_in), 0.0)
+        if n_in <= 0.0:
+            contrib.append(0.0)
+            continue
+        f = min(max(float(n_kept) / n_in, 1e-9), 1.0)
+        contrib.append((1.0 - f) / f)
+    total = sum(contrib)
+    if total <= 0.0:
+        return [1.0 / max(len(contrib), 1)] * len(contrib)
+    return [c / total for c in contrib]
+
+
 class WorstTenantArbiter:
     """Fairness for N query tenants sharing one tree's error budget:
     **worst-tenant-first**. Each epoch the tenant with the largest
@@ -59,11 +83,26 @@ class WorstTenantArbiter:
     comfortably inside the target (min-max fairness on the shared
     knob; the budget only shrinks when *every* tenant is under
     target). ``last_tenant`` records who drove each move for
-    attribution/telemetry."""
+    attribution/telemetry.
+
+    Two feedback grains share the same fairness rule:
+
+    * :meth:`update` — legacy single knob, every level moves together;
+    * :meth:`update_levels` — per-level attribution: the worst tenant's
+      error is split across tree levels by measured variance shares
+      (:func:`level_error_shares`), and each level's own controller sees
+      the error scaled by ``share x n_levels``. A level that dominates
+      the tenant's error sees an amplified error and grows; a level that
+      contributes nothing sees ~0 error (below target) and is free to
+      shrink, releasing budget instead of riding along. The shares are
+      self-correcting: shrinking a level lowers its keep-fraction, which
+      raises its ``(1-f)/f`` share next epoch."""
 
     def __init__(self, cfg: BudgetConfig, initial_size: int):
         self.controller = BudgetController(cfg, initial_size)
         self.last_tenant: str | None = None
+        self.last_shares: list[float] | None = None
+        self._level_controllers: list[BudgetController] | None = None
 
     @property
     def size(self) -> float:
@@ -78,6 +117,30 @@ class WorstTenantArbiter:
         worst = max(finite, key=lambda t: finite[t])
         self.last_tenant = worst
         return self.controller.update(rel_error=finite[worst])
+
+    def update_levels(self, tenant_rel_errors: dict,
+                      level_shares) -> list[int]:
+        """``{tenant: rel error}`` + per-level variance shares → new
+        per-level budgets (see class docstring). Lazily instantiates one
+        ``BudgetController`` per level, seeded from the shared knob so
+        the first per-level move continues where :meth:`update` left
+        off."""
+        n = len(level_shares)
+        if (self._level_controllers is None
+                or len(self._level_controllers) != n):
+            self._level_controllers = [
+                BudgetController(self.controller.cfg,
+                                 int(self.controller.size))
+                for _ in range(n)]
+        finite = {t: e for t, e in tenant_rel_errors.items()
+                  if e == e and e != float("inf")}
+        if not finite:
+            return [int(c.size) for c in self._level_controllers]
+        worst = max(finite, key=lambda t: finite[t])
+        self.last_tenant = worst
+        self.last_shares = [float(s) for s in level_shares]
+        return [ctl.update(rel_error=finite[worst] * float(s) * n)
+                for ctl, s in zip(self._level_controllers, level_shares)]
 
     def update_from_windows(self, plan, windows) -> tuple[int, dict]:
         """One epoch's result rows → (new budget, per-tenant errors).

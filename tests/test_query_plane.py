@@ -188,14 +188,18 @@ def test_engines_agree_on_answers_bitwise():
 def test_sketch_state_rides_tree_state_and_is_donated():
     vals, strs, counts = _ingest_arrays(2)
     qt = _tree("scan", queries=_k8_registry())
-    q_before = qt._state.qstate
-    assert len(q_before) == 8
+    # slotted layout: one (mask, stacked-per-spec) group, leaves carrying
+    # a leading slot axis (a raw registry is one single-slot group)
+    (mask, stacked), = qt._state.qstate
+    assert mask.shape == (1,) and bool(np.asarray(mask)[0])
+    assert len(stacked) == 8
     qt.run_epoch(1, vals, strs, counts)
     # donated: the old sketch buffers are invalidated with the rest
     with pytest.raises(RuntimeError):
-        np.asarray(q_before[5].value)
+        np.asarray(stacked[5].value)
     # quantile sketch accumulated the windows' weighted mass
-    total = float(np.asarray(qt._state.qstate[5].weight).sum())
+    (_, stacked2), = qt._state.qstate
+    total = float(np.asarray(stacked2[5].weight).sum())
     assert total > 0.0
 
 

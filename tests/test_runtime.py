@@ -155,3 +155,41 @@ def test_budget_controller_accuracy_mode_respects_clamps():
         size = c2.update(rel_error=1e-6)    # absurdly accurate → shrink
         assert 32 <= size <= 512
     assert size == 32
+
+
+# ------------------------------------------- per-level error attribution --
+def test_level_error_shares_follow_variance_contribution():
+    from repro.runtime.budget import level_error_shares
+
+    # level 0 keeps 10% (heavy subsampling), level 1 keeps 90%, level 2
+    # forwards everything: shares must rank 0 > 1 > 2 and level 2 gets 0
+    shares = level_error_shares([1000, 100, 90], [100, 90, 90])
+    assert shares[0] > shares[1] > shares[2] == 0.0
+    assert abs(sum(shares) - 1.0) < 1e-12
+    # no subsampling anywhere (or no traffic): uniform fallback
+    assert level_error_shares([100, 100], [100, 100]) == [0.5, 0.5]
+    assert level_error_shares([0, 0, 0], [0, 0, 0]) == [1 / 3] * 3
+
+
+def test_arbiter_update_levels_moves_only_dominant_level():
+    """With the worst tenant's error attributed ~entirely to level 0,
+    level 0's budget grows while the no-share level is free to shrink —
+    the point of per-level attribution (vs. update() moving all levels
+    in lockstep)."""
+    from repro.runtime.budget import WorstTenantArbiter
+
+    cfg = BudgetConfig(min_size=16, max_size=4096, target_rel_error=0.02)
+    arb = WorstTenantArbiter(cfg, initial_size=256)
+    sizes0 = None
+    for _ in range(10):
+        sizes = arb.update_levels({"quiet": 0.001, "noisy": 0.2},
+                                  [0.95, 0.05, 0.0])
+        sizes0 = sizes0 or sizes
+    assert arb.last_tenant == "noisy"
+    assert arb.last_shares == [0.95, 0.05, 0.0]
+    assert sizes[0] > 256          # dominant level grows
+    assert sizes[2] < 256          # zero-share level releases budget
+    # first move (pre-saturation): growth ordered by share
+    assert sizes0[0] > sizes0[1] > sizes0[2]
+    # legacy single-knob API untouched
+    assert arb.update({"noisy": 0.2}) > 0
