@@ -1,8 +1,11 @@
-"""Shared helpers for the benchmark harness: result table printing + JSON."""
+"""Shared helpers for the benchmark harness: result table printing, JSON,
+run provenance (git SHA + device kind + telemetry snapshot) and the
+baseline regression gate used by ``benchmarks.run --compare``."""
 from __future__ import annotations
 
 import json
 import pathlib
+import subprocess
 import time
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
@@ -51,3 +54,83 @@ class Timer:
 
     def __exit__(self, *a):
         self.s = time.perf_counter() - self.t0
+
+
+def run_metadata(telemetry: dict | None = None) -> dict:
+    """Provenance stamp for every BENCH_*.json entry and ``--json``
+    report: git SHA, device platform/kind, UTC timestamp, and (when the
+    producing run carried telemetry) the final ``repro.obs`` snapshot —
+    so a recorded number can always be traced back to the exact code,
+    hardware and realized sampling behaviour that produced it."""
+    meta: dict = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+    try:
+        meta["git_sha"] = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        meta["git_sha"] = None
+    try:
+        import jax
+
+        d = jax.devices()[0]
+        meta["device"] = {"platform": d.platform,
+                         "kind": getattr(d, "device_kind", None),
+                         "count": jax.device_count()}
+    except Exception:
+        meta["device"] = None
+    if telemetry is not None:
+        meta["telemetry"] = telemetry
+    return meta
+
+
+# every column the regression gate treats as a throughput (higher=better)
+THROUGHPUT_COLS = ("pipeline_items_s", "throughput_items_s",
+                   "whs_items_s", "srs_items_s", "native_items_s",
+                   "ingest_items_s")
+
+
+def _row_key(r: dict) -> str:
+    ident = [f"{k}={r[k]}" for k in ("fraction", "engine", "backend",
+                                     "tenants") if k in r]
+    return ",".join(ident) or "row"
+
+
+def compare_reports(baseline: dict, current: dict,
+                    tol: float = 0.10) -> list[dict]:
+    """Regression gate over two ``benchmarks.run --json`` reports.
+
+    Rows are matched module-by-module on their identity columns
+    (fraction/engine/backend/tenants); any throughput column that lands
+    more than ``tol`` below its baseline value is a regression. Returns
+    the regression list — empty means the gate passes. Rows or columns
+    present on only one side are ignored (adding a benchmark is not a
+    regression)."""
+    regressions = []
+    for mod, base_mod in baseline.items():
+        cur_mod = current.get(mod)
+        if not (isinstance(base_mod, dict) and isinstance(cur_mod, dict)
+                and base_mod.get("ok") and cur_mod.get("ok")):
+            continue
+        base_rows = {_row_key(r): r for r in base_mod.get("rows") or []
+                     if isinstance(r, dict)}
+        for r in cur_mod.get("rows") or []:
+            if not isinstance(r, dict):
+                continue
+            b = base_rows.get(_row_key(r))
+            if b is None:
+                continue
+            for col in THROUGHPUT_COLS:
+                bv, cv = b.get(col), r.get(col)
+                if not (isinstance(bv, (int, float))
+                        and isinstance(cv, (int, float)) and bv > 0):
+                    continue
+                drop = 1.0 - float(cv) / float(bv)
+                if drop > tol:
+                    regressions.append({
+                        "module": mod, "row": _row_key(r), "column": col,
+                        "baseline": float(bv), "current": float(cv),
+                        "drop_pct": round(drop * 100.0, 2)})
+    return regressions

@@ -137,11 +137,24 @@ def run() -> list[dict]:
                 for r in eng_rows)
     common.save("fig7_throughput", rows)
     if not common.QUICK:
-        _record_bench(rows)
+        _record_bench(rows, _telemetry_probe(specs, ticks))
     return rows
 
 
-def _record_bench(rows: list[dict]) -> None:
+def _telemetry_probe(specs, ticks) -> dict | None:
+    """One telemetry-ON run of the sweep configuration (f=0.1, scan) so
+    the BENCH entry records the realized sampling behaviour behind the
+    recorded numbers — telemetry stays OFF in the timed sweep itself
+    (it's bitwise-neutral, but the provenance stamp should say what the
+    stream actually did, not perturb the timing pool)."""
+    spec = build_spec(specs, fraction=0.1, mode="whs", seed=7,
+                      telemetry=True)
+    r = run_pipeline(specs, ticks=ticks, warmup_ticks=2, engine="scan",
+                     pipeline_spec=spec, telemetry=True)
+    return r.get("telemetry")
+
+
+def _record_bench(rows: list[dict], telemetry: dict | None = None) -> None:
     """Append/refresh the headline BENCH_fig7.json entry for this run."""
     payload = {"runs": []}
     if BENCH_PATH.exists():
@@ -152,6 +165,7 @@ def _record_bench(rows: list[dict]) -> None:
     by_f = {r["fraction"]: r for r in sweep_rows}
     payload["runs"].append({
         "label": "pr6-fused-tick",
+        "meta": common.run_metadata(telemetry=telemetry),
         "notes": "fused single-kernel level tick (backend=pallas_fused "
                  "available) + saturation passthrough: fraction-1.0 row "
                  "pooled from one measurement pool, gated whs_speedup >= "

@@ -303,6 +303,7 @@ def _record_tenant_bench(rows: list[dict], n_max: int, compiles: int,
                        if r.get("label") != "pr7-tenant-scale"]
     payload["runs"].append({
         "label": "pr7-tenant-scale",
+        "meta": common.run_metadata(),
         "notes": "padded-slot control plane: admit 8→%d same-signature "
                  "tenants (sum+mean each) onto one (4,2,1) tree; compile "
                  "count = one trace per slot bucket; churn (retire/"
@@ -326,6 +327,7 @@ def _record_bench(rows: list[dict], traj: list[dict]) -> None:
                        if r.get("label") != "pr3-query-plane"]
     payload["runs"].append({
         "label": "pr3-query-plane",
+        "meta": common.run_metadata(),
         "notes": "K=8 standing queries on engine=scan; per-query rel error "
                  "vs fraction (CRN over seeds) + closed-loop error budget",
         "accuracy_vs_fraction": [r for r in rows

@@ -44,11 +44,23 @@ def main(argv=None) -> int:
                          "shrink their ticks/sweeps/reps to run in seconds; "
                          "pair with --only to restrict to them (wiring check "
                          "only, numbers are not trajectory-grade)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="regression gate: compare this run's rows against "
+                         "a previous --json report and exit non-zero on "
+                         "any throughput drop beyond --compare-tol")
+    ap.add_argument("--compare-tol", type=float, default=0.10,
+                    metavar="FRAC",
+                    help="allowed fractional throughput drop before "
+                         "--compare fails (default 0.10 = 10%%)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the host span tracer's Chrome/Perfetto "
+                         "trace.json (one span per module plus the "
+                         "drivers' ingest/dispatch spans) to PATH")
     args = ap.parse_args(argv)
     chosen = args.only.split(",") if args.only else list(MODULES)
 
+    from benchmarks import common
     if args.quick:
-        from benchmarks import common
         common.QUICK = True
 
     from benchmarks import (fig6_accuracy, fig7_throughput, fig8_accuracy,
@@ -60,13 +72,16 @@ def main(argv=None) -> int:
         "fig11": fig11_skew, "fig12": fig12_realworld, "train": train_plane,
         "kernels": kernels_micro, "roofline": roofline,
     }
+    from repro.obs.trace import get_tracer, span
+
     failures = 0
-    report = {}
+    report = {"meta": common.run_metadata()}
     for name in chosen:
         print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
         t0 = time.time()
         try:
-            rows = impl[name].run()
+            with span(f"bench:{name}"):
+                rows = impl[name].run()
             dt = time.time() - t0
             report[name] = {"ok": True, "seconds": dt, "rows": rows}
             print(f"[{name}] ok in {dt:.1f}s")
@@ -81,6 +96,20 @@ def main(argv=None) -> int:
         path = pathlib.Path(args.json)
         path.write_text(json.dumps(report, indent=1, default=str))
         print(f"wrote {path}")
+    if args.trace:
+        get_tracer().save(args.trace)
+        print(f"wrote {args.trace}")
+    if args.compare:
+        baseline = json.loads(pathlib.Path(args.compare).read_text())
+        regressions = common.compare_reports(baseline, report,
+                                             tol=args.compare_tol)
+        if regressions:
+            common.table(f"THROUGHPUT REGRESSIONS vs {args.compare} "
+                         f"(tol {args.compare_tol:.0%})", regressions)
+            failures += 1
+        else:
+            print(f"regression gate vs {args.compare}: pass "
+                  f"(no throughput drop > {args.compare_tol:.0%})")
     return 1 if failures else 0
 
 

@@ -8,10 +8,10 @@ state, one fused device dispatch for the entire epoch.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.api import PipelineSpec, SamplerSpec, TopologySpec, compile
+from repro.api import (PipelineSpec, SamplerSpec, TelemetrySpec,
+                       TopologySpec, compile)
 from repro.data import stream as S
+from repro.obs import snapshot
 from repro.query.registry import QueryRegistry
 
 # -- the whole system, declaratively --------------------------------------
@@ -21,6 +21,7 @@ spec = PipelineSpec(
     tenants=(QueryRegistry().register_sum().register_mean()
              .register_quantile("quantiles", (0.5, 0.99))
              .as_tenant("demo"),),
+    telemetry=TelemetrySpec(enabled=True),
 )
 pipe = compile(spec)
 state = pipe.init()
@@ -35,10 +36,14 @@ state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
 # -- windowed answers ± rigorous bounds -----------------------------------
 rows = pipe.rows(wa)
 approx = sum(r["sum"] for r in rows)
-bound = 2.0 * float(np.sqrt(sum(r["sum_var"] for r in rows)))
 kept = sum(r["n_sampled"] for r in rows)
+# the realized ±2σ bound comes straight from the in-graph telemetry
+# counters (repro.obs) — no host-side recompute over the window rows
+tel = snapshot(state)
+bound = tel["bound_2sigma"]
 print(f"{len(rows)} windows, {kept}/{batch.exact_count} items at the root "
-      f"(10% budget), 1 fused dispatch")
+      f"(10% budget, realized hop-0 fraction "
+      f"{tel['levels'][0]['effective_fraction']:.1%}), 1 fused dispatch")
 print(f"SUM  ≈ {approx:.4e} ± {bound:.2e} (2σ)   exact {batch.exact_sum:.4e}"
       f"  (|err| {abs(approx - batch.exact_sum) / batch.exact_sum:.4%})")
 last = rows[-1]

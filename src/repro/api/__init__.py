@@ -16,12 +16,14 @@ from repro.api.pipeline import (CompiledPipeline, PipelineState,
                                 WindowAnswers, compile, restore_state,
                                 save_state)
 from repro.api.spec import (BudgetSpec, PipelineSpec, SamplerSpec,
-                            SpecError, TenantSpec, TopologySpec, resolve)
+                            SpecError, TelemetrySpec, TenantSpec,
+                            TopologySpec, resolve)
 
 compile_pipeline = compile   # alias for call sites that shadow the builtin
 
 __all__ = [
     "PipelineSpec", "TopologySpec", "SamplerSpec", "BudgetSpec",
+    "TelemetrySpec",
     "TenantSpec", "SpecError", "resolve", "compile", "compile_pipeline",
     "CompiledPipeline", "PipelineState", "WindowAnswers",
     "save_state", "restore_state",

@@ -186,12 +186,13 @@ def _program_entry(sig: tuple, traced_plan) -> dict:
     entry = _PROGRAM_CACHE.get(sig)
     if entry is None:
         (fanin, capacities, max_sizes, iv, num_strata, allocation,
-         backend, mode, p_level, fraction, _plan) = sig
+         backend, mode, p_level, fraction, telemetry, _plan) = sig
         trace_counter = {"traces": 0}
         tick_fn = T._build_scan_tick(
             list(fanin), list(capacities), list(max_sizes), list(iv),
             num_strata, allocation, backend, mode, p_level, fraction,
-            trace_counter=trace_counter, plan=traced_plan)
+            trace_counter=trace_counter, plan=traced_plan,
+            telemetry=telemetry)
         entry = {"tick_fn": tick_fn, "epoch_fns": {},
                  "trace_counter": trace_counter}
         _PROGRAM_CACHE[sig] = entry
@@ -206,6 +207,27 @@ def program_cache_stats() -> dict:
     reuses} — a miss is (at most) one compile per epoch length; the
     tenant-churn benchmark asserts misses stay O(log n_tenants)."""
     return dict(_PROGRAM_STATS)
+
+
+def _sync_telemetry_slots(state: "PipelineState", n_out: int
+                          ) -> "PipelineState":
+    """Churn across a slot-bucket boundary resizes the traced plan's
+    padded answer width; the telemetry ``slot_rel_bound_sum`` leaf must
+    follow (pad with zeros / truncate retired tail slots) or the next
+    epoch's accumulate would shape-mismatch."""
+    tel = state.tree.telemetry
+    if not hasattr(tel, "slot_rel_bound_sum"):
+        return state
+    cur = tel.slot_rel_bound_sum
+    if cur.shape[0] == n_out:
+        return state
+    if cur.shape[0] < n_out:
+        new = jnp.concatenate(
+            [cur, jnp.zeros((n_out - cur.shape[0],), cur.dtype)])
+    else:
+        new = cur[:n_out]
+    return state._replace(tree=state.tree._replace(
+        telemetry=tel._replace(slot_rel_bound_sum=new)))
 
 
 class CompiledPipeline(QueryRouting):
@@ -230,12 +252,16 @@ class CompiledPipeline(QueryRouting):
         self.plan = r.plan
         self.tenant_names = tuple(t.name for t in spec.tenants)
         self._traced_plan = r.plan.core if r.plan is not None else None
+        self.telemetry_enabled = spec.telemetry.enabled
+        # The telemetry flag sits immediately before the traced-plan
+        # element so _with_plan's ``sig[:-1] + (plan.core,)`` slice
+        # stays valid across tenant churn.
         self._program_sig = (
             tuple(self.fanin), tuple(self.capacities),
             tuple(self.max_sample_sizes), tuple(self.interval_ticks),
             self.num_strata, spec.sampler.allocation, spec.sampler.backend,
             spec.sampler.mode, r.p_level, spec.sampler.fraction,
-            self._traced_plan)
+            self.telemetry_enabled, self._traced_plan)
         entry = _program_entry(self._program_sig, self._traced_plan)
         self.trace_counter = entry["trace_counter"]
         self._tick_fn = entry["tick_fn"]
@@ -275,14 +301,17 @@ class CompiledPipeline(QueryRouting):
             raise SpecError("admit() needs a tenanted pipeline — compile "
                             "with at least one TenantSpec")
         name, specs = tenant.name, tuple(tenant.queries)
-        try:
-            new_plan, transform = self.plan.admit(name, specs)
-        except (KeyError, ValueError) as e:
-            raise SpecError(str(e)) from e
-        qstate = transform(state.tree.qstate, 0)
-        state = state._replace(tree=state.tree._replace(qstate=qstate))
-        return self._with_plan(new_plan,
-                               self.spec.tenants + (tenant,)), state
+        from repro.obs.trace import span
+        with span("admit", tenant=name):
+            try:
+                new_plan, transform = self.plan.admit(name, specs)
+            except (KeyError, ValueError) as e:
+                raise SpecError(str(e)) from e
+            qstate = transform(state.tree.qstate, 0)
+            state = state._replace(tree=state.tree._replace(qstate=qstate))
+            state = _sync_telemetry_slots(state, new_plan.core.n_out)
+            return self._with_plan(new_plan,
+                                   self.spec.tenants + (tenant,)), state
 
     def retire(self, state: PipelineState, tenant_id: str
                ) -> tuple["CompiledPipeline", PipelineState]:
@@ -292,15 +321,18 @@ class CompiledPipeline(QueryRouting):
         """
         if self.plan is None:
             raise SpecError("retire() needs a tenanted pipeline")
-        try:
-            new_plan, transform = self.plan.retire(tenant_id)
-        except (KeyError, ValueError) as e:
-            raise SpecError(str(e)) from e
-        qstate = transform(state.tree.qstate, 0)
-        state = state._replace(tree=state.tree._replace(qstate=qstate))
-        return self._with_plan(
-            new_plan, tuple(t for t in self.spec.tenants
-                            if t.name != tenant_id)), state
+        from repro.obs.trace import span
+        with span("retire", tenant=tenant_id):
+            try:
+                new_plan, transform = self.plan.retire(tenant_id)
+            except (KeyError, ValueError) as e:
+                raise SpecError(str(e)) from e
+            qstate = transform(state.tree.qstate, 0)
+            state = state._replace(tree=state.tree._replace(qstate=qstate))
+            state = _sync_telemetry_slots(state, new_plan.core.n_out)
+            return self._with_plan(
+                new_plan, tuple(t for t in self.spec.tenants
+                                if t.name != tenant_id)), state
 
     # ------------------------------------------------------------ init --
     @property
@@ -315,10 +347,27 @@ class CompiledPipeline(QueryRouting):
         tick counter at 1. ``key`` is accepted for API symmetry (state
         initialization is deterministic — randomness enters per epoch)."""
         del key
+        tel = ()
+        if self.telemetry_enabled:
+            from repro.obs.telemetry import EpochTelemetry
+
+            tel = EpochTelemetry.create(
+                len(self.fanin), self.num_strata,
+                self._traced_plan.n_out
+                if self._traced_plan is not None else 0)
         st = TreeState.create(
             self.fanin, self.capacities, self.num_strata,
-            qstate=self.plan.init_state() if self.plan is not None else ())
+            qstate=self.plan.init_state() if self.plan is not None else (),
+            telemetry=tel)
         return PipelineState(tree=st, tick=jnp.int32(1))
+
+    def telemetry_snapshot(self, state: PipelineState) -> dict | None:
+        """Host-readable snapshot of the in-graph telemetry counters
+        (``None`` when ``spec.telemetry.enabled`` is off) — see
+        ``repro.obs.snapshot``."""
+        from repro.obs.telemetry import snapshot
+
+        return snapshot(state)
 
     # ------------------------------------------------------------ run --
     def clamp_budgets(self, budgets) -> list[float]:
@@ -428,6 +477,7 @@ def save_state(root, step: int, state: PipelineState, *,
     spec alone cannot reconstruct (retirement leaves slot holes). Save
     *before* donating the state into ``run_epoch``."""
     from repro.checkpoint import manager
+    from repro.obs.trace import span
 
     if pipeline is not None and spec is None:
         spec = pipeline.spec
@@ -436,7 +486,8 @@ def save_state(root, step: int, state: PipelineState, *,
         specmod.build_plan(spec) if spec is not None else None)
     if plan is not None:
         meta["slots"] = plan.slot_manifest()
-    return manager.save(root, step, state, meta=meta, keep_n=keep_n)
+    with span("checkpoint", op="save", step=step):
+        return manager.save(root, step, state, meta=meta, keep_n=keep_n)
 
 
 def restore_state(root, compiled: CompiledPipeline, step: int | None = None
@@ -476,7 +527,9 @@ def restore_state(root, compiled: CompiledPipeline, step: int | None = None
                 f"Admit/retire this pipeline to the saved live set (same "
                 f"order) or restore into a pipeline compiled from the "
                 f"checkpoint's spec before any churn.")
-    state, meta = manager.restore(root, step, compiled.init())
+    from repro.obs.trace import span
+    with span("checkpoint", op="restore", step=step):
+        state, meta = manager.restore(root, step, compiled.init())
     return state, meta
 
 

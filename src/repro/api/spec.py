@@ -199,6 +199,26 @@ class TenantSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """The in-graph observability plane (``repro.obs``).
+
+    ``enabled`` statically compiles the ``EpochTelemetry`` counter
+    update into the epoch program: the donated state gains cumulative
+    per-level/per-stratum counters and the realized error-bound
+    trajectory, read back via ``repro.obs.snapshot``. Telemetry
+    consumes no PRNG and runs inside the existing tick, so sample state
+    and window answers are bit-identical on or off, at zero extra
+    dispatches. Off (the default) carries zero extra state leaves."""
+
+    enabled: bool = False
+
+    def __post_init__(self):
+        _require(isinstance(self.enabled, bool),
+                 f"telemetry.enabled must be a bool, got "
+                 f"{self.enabled!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineSpec:
     """The whole job: topology × sampler × tenants × budget policy."""
 
@@ -207,6 +227,8 @@ class PipelineSpec:
     tenants: tuple = ()
     budget: BudgetSpec = dataclasses.field(default_factory=BudgetSpec)
     seed: int = 0
+    telemetry: TelemetrySpec = dataclasses.field(
+        default_factory=TelemetrySpec)
 
     def __post_init__(self):
         object.__setattr__(self, "tenants", tuple(self.tenants))
@@ -214,6 +236,9 @@ class PipelineSpec:
             _require(isinstance(t, TenantSpec),
                      f"tenants must be TenantSpec instances, got "
                      f"{type(t).__name__}")
+        _require(isinstance(self.telemetry, TelemetrySpec),
+                 f"telemetry must be a TelemetrySpec, got "
+                 f"{type(self.telemetry).__name__}")
         names = [t.name for t in self.tenants]
         if len(set(names)) != len(names):  # build the dup list lazily:
             # an eager f-string here would cost O(n^2) per spec build,
@@ -258,7 +283,7 @@ class PipelineSpec:
                  f"(this build reads version 1)")
         sections = {
             "topology": TopologySpec, "sampler": SamplerSpec,
-            "budget": BudgetSpec,
+            "budget": BudgetSpec, "telemetry": TelemetrySpec,
         }
         kwargs = {}
         for key, klass in sections.items():

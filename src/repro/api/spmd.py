@@ -73,6 +73,10 @@ class SpmdPipelineState(NamedTuple):
 
     tick: Any
     qstate: Any
+    # Optional replicated ``repro.obs.telemetry.EpochTelemetry`` leaves
+    # (every counter derives from psums, so every device carries the
+    # identical values); ``()`` when telemetry is disabled.
+    telemetry: Any = ()
 
 
 # Traced-program cache for the tenant lowering, keyed on everything the
@@ -84,10 +88,18 @@ _SPMD_PROGRAM_CACHE: dict = {}
 _SPMD_PROGRAM_STATS = {"misses": 0, "hits": 0}
 
 
+def spmd_program_cache_stats() -> dict:
+    """{"misses": distinct shard_map'd programs traced, "hits": reuses}
+    — the mesh-path counterpart of ``pipeline.program_cache_stats``,
+    consumed by the ``repro.obs.metrics`` exposition layer."""
+    return dict(_SPMD_PROGRAM_STATS)
+
+
 def _spmd_program_entry(mesh, axis_name, core, max_budget, num_strata,
-                        allocation, backend) -> tuple[tuple, dict]:
+                        allocation, backend,
+                        telemetry=False) -> tuple[tuple, dict]:
     sig = (mesh, axis_name, core, max_budget, num_strata, allocation,
-           backend)
+           backend, telemetry)
     entry = _SPMD_PROGRAM_CACHE.get(sig)
     if entry is not None:
         _SPMD_PROGRAM_STATS["hits"] += 1
@@ -97,8 +109,12 @@ def _spmd_program_entry(mesh, axis_name, core, max_budget, num_strata,
     rep_kw = _rep_check_kwargs(sm, backend != "pallas")
     counter = {"traces": 0}
     parts = spmd_query_epoch_specs(axis_name, core.init_state())
+    # The telemetry leaves are replicated by construction (psum-derived);
+    # a single P() prefix covers the whole subtree — and the empty ``()``
+    # subtree when telemetry is off.
     state_spec = SpmdPipelineState(tick=parts["replicated"],
-                                   qstate=parts["qstate"])
+                                   qstate=parts["qstate"],
+                                   telemetry=parts["replicated"])
     kw = dict(axis_name=axis_name, max_budget=max_budget,
               num_strata=num_strata, allocation=allocation,
               sampler_backend=backend)
@@ -110,9 +126,34 @@ def _spmd_program_entry(mesh, axis_name, core, max_budget, num_strata,
         qfinal, outs = T.spmd_query_plane_epoch(
             key, state.tick, budget, batches, local_q, core, **kw)
         ts = state.tick + jnp.arange(n_ticks, dtype=jnp.int32)
+        tel = state.telemetry
+        if telemetry:
+            # All counters derive from psum/pmean outputs (replicated →
+            # axis-invariant), so the update costs one extra psum of a
+            # [T] vector and stays inside the same epoch dispatch.
+            ok, se, sv, nsel = outs[0], outs[1], outs[2], outs[5]
+            ans, bnd = outs[7], outs[8]
+            off_t = jax.lax.psum(
+                jnp.sum(batches.valid.astype(jnp.float32), axis=1),
+                axis_name)
+            kept_t = nsel.astype(jnp.float32)
+            rel = bnd / jnp.maximum(jnp.abs(ans), 1e-9)
+            tel = tel._replace(
+                items_in=tel.items_in + jnp.sum(off_t),
+                items_kept=tel.items_kept + jnp.sum(kept_t),
+                flushes=tel.flushes + jnp.sum(ok.astype(jnp.int32)),
+                saturation_hits=tel.saturation_hits + jnp.sum(
+                    (ok & (kept_t >= off_t)).astype(jnp.int32)),
+                windows=tel.windows + jnp.sum(ok.astype(jnp.int32)),
+                root_sum=tel.root_sum + jnp.sum(jnp.where(ok, se, 0.0)),
+                root_sum_var=tel.root_sum_var
+                + jnp.sum(jnp.where(ok, sv, 0.0)),
+                slot_rel_bound_sum=tel.slot_rel_bound_sum
+                + jnp.sum(jnp.where(ok[:, None], rel, 0.0), axis=0))
         state2 = SpmdPipelineState(
             tick=state.tick + jnp.int32(n_ticks),
-            qstate=jax.tree.map(lambda v: v[None], qfinal))
+            qstate=jax.tree.map(lambda v: v[None], qfinal),
+            telemetry=tel)
         return state2, (ts,) + outs
 
     fn = sm(epoch, mesh=mesh,
@@ -152,6 +193,7 @@ class CompiledSpmdPipeline(QueryRouting):
         self.local_budget = int(r.sample_sizes[0])
         self.max_local_budget = int(r.max_sample_sizes[0])
         self.root_budget = int(r.sample_sizes[-1])
+        self.telemetry_enabled = spec.telemetry.enabled
         self.trace_counter = {"traces": 0}
         sm = _shard_map()
         # pallas_call has no replication rule under shard_map's rep/vma
@@ -167,7 +209,7 @@ class CompiledSpmdPipeline(QueryRouting):
             self._program_sig, entry = _spmd_program_entry(
                 mesh, axis_name, self.plan.core, self.max_local_budget,
                 spec.topology.num_strata, spec.sampler.allocation,
-                spec.sampler.backend)
+                spec.sampler.backend, telemetry=self.telemetry_enabled)
             self._fn = entry["fn"]
             self.trace_counter = entry["trace_counter"]
         elif spec.sampler.mode == "srs":
@@ -211,10 +253,29 @@ class CompiledSpmdPipeline(QueryRouting):
             pipe._program_sig, entry = _spmd_program_entry(
                 self.mesh, self.axis_name, plan.core,
                 self.max_local_budget, self.spec.topology.num_strata,
-                self.spec.sampler.allocation, self.spec.sampler.backend)
+                self.spec.sampler.allocation, self.spec.sampler.backend,
+                telemetry=self.telemetry_enabled)
             pipe._fn = entry["fn"]
             pipe.trace_counter = entry["trace_counter"]
         return pipe
+
+    def _sync_telemetry_slots(self, state, n_out: int):
+        """Keep the telemetry ``slot_rel_bound_sum`` leaf in step with a
+        churned plan's padded answer width (same rule as the local
+        pipeline's ``_sync_telemetry_slots``)."""
+        tel = getattr(state, "telemetry", ())
+        if not hasattr(tel, "slot_rel_bound_sum"):
+            return state
+        cur = tel.slot_rel_bound_sum
+        if cur.shape[0] == n_out:
+            return state
+        if cur.shape[0] < n_out:
+            new = jnp.concatenate(
+                [cur, jnp.zeros((n_out - cur.shape[0],), cur.dtype)])
+        else:
+            new = cur[:n_out]
+        return state._replace(
+            telemetry=tel._replace(slot_rel_bound_sum=new))
 
     def admit(self, state, tenant
               ) -> tuple["CompiledSpmdPipeline", "SpmdPipelineState"]:
@@ -232,8 +293,10 @@ class CompiledSpmdPipeline(QueryRouting):
         except (KeyError, ValueError) as e:
             raise SpecError(str(e)) from e
         qstate = transform(state.qstate, 1)    # axis 0 = device
+        state = self._sync_telemetry_slots(
+            state._replace(qstate=qstate), new_plan.core.n_out)
         return (self._with_plan(new_plan, self.spec.tenants + (tenant,)),
-                state._replace(qstate=qstate))
+                state)
 
     def retire(self, state, tenant_id: str
                ) -> tuple["CompiledSpmdPipeline", "SpmdPipelineState"]:
@@ -246,10 +309,12 @@ class CompiledSpmdPipeline(QueryRouting):
         except (KeyError, ValueError) as e:
             raise SpecError(str(e)) from e
         qstate = transform(state.qstate, 1)
+        state = self._sync_telemetry_slots(
+            state._replace(qstate=qstate), new_plan.core.n_out)
         return (self._with_plan(
             new_plan, tuple(t for t in self.spec.tenants
                             if t.name != tenant_id)),
-            state._replace(qstate=qstate))
+            state)
 
     @property
     def default_key(self) -> jax.Array:
@@ -274,7 +339,24 @@ class CompiledSpmdPipeline(QueryRouting):
                 NamedSharding(self.mesh, P(self.axis_name))), q0)
         tick = jax.device_put(jnp.int32(0),
                               NamedSharding(self.mesh, P()))
-        return SpmdPipelineState(tick=tick, qstate=stacked)
+        tel = ()
+        if self.telemetry_enabled:
+            from repro.obs.telemetry import EpochTelemetry
+
+            # single merged "level", no per-stratum root telemetry on
+            # the summary-merge path (strata merge via psums, not a
+            # single root SampleResult), padded slot width from the core
+            tel = jax.tree.map(
+                lambda v: jax.device_put(v, NamedSharding(self.mesh, P())),
+                EpochTelemetry.create(1, 0, self.plan.core.n_out))
+        return SpmdPipelineState(tick=tick, qstate=stacked, telemetry=tel)
+
+    def telemetry_snapshot(self, state) -> dict | None:
+        """Host-readable snapshot of the in-graph telemetry counters
+        (``None`` when disabled) — see ``repro.obs.snapshot``."""
+        from repro.obs.telemetry import snapshot
+
+        return snapshot(state)
 
     def clamp_budgets(self, budgets) -> float:
         """Applied level-0 sample budget clamped to [1, ceiling] — same
@@ -318,6 +400,16 @@ class CompiledSpmdPipeline(QueryRouting):
         b = jnp.float32(self.clamp_budgets(budgets))
         state, outs = self._fn(state, key, b, batches)
         ts, ok, se, sv, me, mv, nsel, hist, ans, bnd = outs
+        tel = getattr(state, "telemetry", ())
+        if hasattr(tel, "merge_bytes"):
+            # The byte model depends on the LIVE tenant set (admit/retire
+            # change what crosses the axis), so the fold happens here on
+            # the host per epoch rather than being baked into the traced
+            # program: windows × the current static per-window model.
+            windows_delta = int(np.asarray(ok).sum())
+            state = state._replace(telemetry=tel._replace(
+                merge_bytes=tel.merge_bytes + jnp.float32(
+                    windows_delta * self.summary_bytes_per_window)))
         # padded slot vector → public live-tenant vector (eager gather
         # outside the jit — follows churn with zero retraces)
         ans, bnd = self.plan.compact(ans), self.plan.compact(bnd)

@@ -151,7 +151,7 @@ def _route_pack(values_c, strata_c, valid_c, child_of: np.ndarray):
 # --------------------------------------------------------------------------
 def _whs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
                    sample_size, *, num_strata, allocation, backend, budget,
-                   hist_bins=64, plan=None, qstate=()):
+                   hist_bins=64, plan=None, qstate=(), telemetry=False):
     """Root = sampling + the user query (§III-A lines 16-20). The query here
     is the paper's evaluation workload: windowed SUM and MEAN with error
     bounds, plus a value histogram (a representative GROUP-BY aggregate —
@@ -182,9 +182,18 @@ def _whs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
     outs = (s.estimate, s.variance, m.estimate, m.variance,
             jnp.sum(res.selected.astype(jnp.int32)), h.estimate)
     if plan is None:
+        if telemetry:
+            outs = outs + (res.c.astype(jnp.float32),
+                           res.y.astype(jnp.float32))
         return outs, ()
     qstate2, answers, bounds = plan.evaluate(k, batch, res, qstate)
-    return outs + (answers, bounds), qstate2
+    outs = outs + (answers, bounds)
+    if telemetry:
+        # per-stratum offered (c) and kept (y = min(c, reservoir)) counts —
+        # the realized stratified sampling fraction comes straight from the
+        # sampler's own bookkeeping, no recomputation.
+        outs = outs + (res.c.astype(jnp.float32), res.y.astype(jnp.float32))
+    return outs, qstate2
 
 
 def _srs_root_core(key, t, lvl, values, strata, valid, w_in, c_in,
@@ -444,7 +453,8 @@ def _flush_meta(wc_acc, c_acc, seen, w_in, c_in):
 
 def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                      num_strata, allocation, backend, mode, p_level,
-                     fraction, trace_counter=None, plan=None):
+                     fraction, trace_counter=None, plan=None,
+                     telemetry=False):
     """Build the fused whole-tree tick: ``(state, key, t, budgets, ingest)
     → (state', per-tick outputs)``.
 
@@ -466,6 +476,12 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
     root's standing queries evaluate inside this same traced tick, with
     their sketch state carried in ``state.qstate`` (donated with the
     rest of ``TreeState``).
+
+    ``telemetry`` statically compiles the ``EpochTelemetry`` counter
+    update in (or out). Every counter derives from quantities the tick
+    already computes — flush occupancy, forwarded counts, the root
+    sampler's per-stratum ``c``/``y`` — and telemetry consumes no PRNG,
+    so sample state and window answers are bit-identical either way.
     """
     from repro.core.window import TreeState
 
@@ -489,11 +505,20 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
 
         n_fwd_levels = []
         root_out = None
+        tel_in, tel_kept = [], []
+        root_strat = None
         for l in range(n_levels):
             iv = int(interval_ticks[l])
             is_root = l == n_levels - 1
             cap = capacities[l]
             fill = lv["fill"][l]
+            if telemetry:
+                # Items offered at this level's flush: the pre-flush
+                # occupancy, zero on not-due ticks. Computed OUTSIDE the
+                # cond from state the tick already holds.
+                offered = jnp.sum(fill).astype(jnp.float32)
+                tel_in.append(offered if iv == 1 else
+                              jnp.where(t % iv == 0, offered, 0.0))
 
             def run_level(l=l, iv=iv, is_root=is_root, cap=cap, fill=fill):
                 """Flush + sample + route + reset for a due level. Returns
@@ -526,7 +551,8 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                             w_eff[0], c_eff[0], budgets[l],
                             num_strata=num_strata, allocation=allocation,
                             backend=backend, budget=int(sample_sizes[l]),
-                            plan=plan, qstate=state.qstate)
+                            plan=plan, qstate=state.qstate,
+                            telemetry=telemetry)
                     root_ok = jnp.sum(fill) > 0
                     return ((root_ok,) + outs, reset, q_new)
                 if mode == "srs":
@@ -569,6 +595,9 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
                     if plan is not None:
                         nul = nul + (jnp.zeros((plan.n_out,), jnp.float32),
                                      jnp.zeros((plan.n_out,), jnp.float32))
+                    if telemetry and mode != "srs":
+                        nul = nul + (jnp.zeros((num_strata,), jnp.float32),
+                                     jnp.zeros((num_strata,), jnp.float32))
                     return (nul, keep, state.qstate)
                 nul = (lv["values"][l + 1], lv["strata"][l + 1],
                        lv["fill"][l + 1], lv["dropped"][l + 1],
@@ -586,18 +615,55 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
 
             if is_root:
                 root_out, tail, q_out = out
+                if telemetry and mode != "srs":
+                    root_strat = root_out[-2:]
+                    root_out = root_out[:-2]
+                if telemetry:
+                    tel_kept.append(root_out[5].astype(jnp.float32))
             else:
                 (lv["values"][l + 1], lv["strata"][l + 1], lv["fill"][l + 1],
                  lv["dropped"][l + 1], lv["wc_acc"][l + 1],
                  lv["c_acc"][l + 1], lv["seen"][l + 1]) = out[:7]
                 n_fwd_levels.append(out[7])
+                if telemetry:
+                    tel_kept.append(out[7].astype(jnp.float32))
                 tail = out[8:]
             (lv["fill"][l], lv["wc_acc"][l], lv["c_acc"][l], lv["seen"][l],
              lv["w_in"][l], lv["c_in"][l]) = tail
 
+        if telemetry:
+            tel = state.telemetry
+            d_in = jnp.stack(tel_in)
+            d_kept = jnp.stack(tel_kept)
+            flushed = d_in > 0
+            root_ok = root_out[0]
+            se, sv = root_out[1], root_out[2]
+            new_tel = tel._replace(
+                items_in=tel.items_in + d_in,
+                items_kept=tel.items_kept + d_kept,
+                flushes=tel.flushes + flushed.astype(jnp.int32),
+                saturation_hits=tel.saturation_hits + (
+                    flushed & (d_kept >= d_in)).astype(jnp.int32),
+                windows=tel.windows + root_ok.astype(jnp.int32),
+                root_sum=tel.root_sum + jnp.where(root_ok, se, 0.0),
+                root_sum_var=tel.root_sum_var + jnp.where(root_ok, sv, 0.0),
+            )
+            if root_strat is not None:
+                new_tel = new_tel._replace(
+                    stratum_in=new_tel.stratum_in + root_strat[0],
+                    stratum_kept=new_tel.stratum_kept + root_strat[1])
+            if plan is not None:
+                ans, bnd = root_out[7], root_out[8]
+                rel = bnd / jnp.maximum(jnp.abs(ans), 1e-9)
+                new_tel = new_tel._replace(
+                    slot_rel_bound_sum=new_tel.slot_rel_bound_sum
+                    + jnp.where(root_ok, rel, 0.0))
+        else:
+            new_tel = state.telemetry
+
         new_state = TreeState(
             **{f: tuple(lv[f]) for f in TreeState.LEVEL_FIELDS},
-            qstate=q_out)
+            qstate=q_out, telemetry=new_tel)
         out = root_out + (jnp.stack(n_fwd_levels),)
         return new_state, out
 

@@ -151,15 +151,22 @@ class TreeState(NamedTuple):
     c_acc: tuple
     seen: tuple
     qstate: tuple = ()
+    # Optional ``repro.obs.telemetry.EpochTelemetry`` leaves, carried in
+    # the donated state so the scan tick can accumulate counters at zero
+    # extra dispatches. ``()`` (zero leaves) when telemetry is disabled —
+    # checkpoints, donation, and epoch shapes are untouched by default.
+    telemetry: tuple = ()
 
     # The per-level buffer fields (everything except the root-owned
-    # ``qstate``) — what the scan tick iterates over level by level.
+    # ``qstate`` and ``telemetry``) — what the scan tick iterates over
+    # level by level.
     LEVEL_FIELDS = ("values", "strata", "fill", "dropped", "w_in", "c_in",
                     "wc_acc", "c_acc", "seen")
 
     @staticmethod
     def create(fanin: list[int], capacities: list[int],
-               num_strata: int, qstate: tuple = ()) -> "TreeState":
+               num_strata: int, qstate: tuple = (),
+               telemetry: tuple = ()) -> "TreeState":
         """Fresh (empty-buffer, identity-metadata) whole-tree state;
         ``qstate`` seeds the root's query-sketch state (pass the
         compiled plan's ``init_state()`` when queries are registered)."""
@@ -176,6 +183,7 @@ class TreeState(NamedTuple):
             w_in=tuple(jnp.ones((n, x), jnp.float32) for n in fanin),
             c_in=zx(jnp.float32), wc_acc=zx(jnp.float32),
             c_acc=zx(jnp.float32), seen=zx(bool), qstate=qstate,
+            telemetry=telemetry,
         )
 
 

@@ -56,7 +56,8 @@ def build_spec(specs=None, *, fraction: float, capacity: int | None = None,
                allocation: str = "fair", seed: int = 0, mode: str = "whs",
                sampler_backend: str = "topk", queries=None,
                target_rel_error: float | None = None,
-               max_fraction: float | None = None) -> PipelineSpec:
+               max_fraction: float | None = None,
+               telemetry: bool = False) -> PipelineSpec:
     """The §V testbed job as ONE declarative ``PipelineSpec`` — what
     every driver (this CLI, benchmarks, examples) constructs and hands
     to ``repro.api.compile`` / ``HostTree.from_spec``.
@@ -80,6 +81,8 @@ def build_spec(specs=None, *, fraction: float, capacity: int | None = None,
         tenants = tuple(queries)
     else:
         tenants = (TenantSpec.from_registry("default", queries),)
+    from repro.api.spec import TelemetrySpec
+
     return PipelineSpec(
         topology=TopologySpec(fanin=tuple(fanin), capacity=capacity,
                               interval_ticks=(tuple(interval_ticks)
@@ -91,6 +94,7 @@ def build_spec(specs=None, *, fraction: float, capacity: int | None = None,
         budget=BudgetSpec(max_fraction=max_fraction,
                           target_rel_error=target_rel_error),
         seed=seed,
+        telemetry=TelemetrySpec(enabled=telemetry),
     )
 
 
@@ -163,13 +167,16 @@ class _CompiledDriver:
         import time as _time
 
         from repro.core.tree import accumulate_epoch_accounting
+        from repro.obs.trace import span
 
         t_start = _time.perf_counter()
-        self.state, wa = self.pipe.run_epoch(
-            self.state, self._key, values, strata, counts,
-            budgets=self.sample_sizes)
-        rows = self.pipe.rows(wa)                 # device→host sync
-        n_fwd = np.asarray(wa.n_forwarded)
+        with span("epoch_dispatch", t0=t0, ticks=int(np.shape(counts)[0])):
+            self.state, wa = self.pipe.run_epoch(
+                self.state, self._key, values, strata, counts,
+                budgets=self.sample_sizes)
+        with span("block_until_ready"):
+            rows = self.pipe.rows(wa)             # device→host sync
+            n_fwd = np.asarray(wa.n_forwarded)
         wall = _time.perf_counter() - t_start
         accumulate_epoch_accounting(self, wall, counts, offered, n_fwd)
         self.results.extend(rows)
@@ -190,7 +197,8 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
                  queries=None, target_rel_error: float | None = None,
                  max_fraction: float | None = None,
                  pipeline_spec: PipelineSpec | None = None,
-                 return_stream: bool = False):
+                 return_stream: bool = False,
+                 telemetry: bool = False):
     """Stream → tree → per-window results + ground truth. Returns a dict.
 
     ``capacity=None`` provisions level-0 buffers for the offered load
@@ -239,7 +247,8 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
             num_sources=num_sources, fanin=fanin,
             interval_ticks=interval_ticks, allocation=allocation, seed=seed,
             mode=mode, sampler_backend=sampler_backend, queries=queries,
-            target_rel_error=target_rel_error, max_fraction=max_fraction)
+            target_rel_error=target_rel_error, max_fraction=max_fraction,
+            telemetry=telemetry)
     # The spec is the job description: derive every reported/derived
     # quantity from it so an explicitly-passed spec and the legacy
     # keyword path behave identically.
@@ -334,6 +343,10 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
     # reset accounting after warmup (sketch state included: continuous
     # answers must cover exactly the measured stream)
     tree.reset_query_state()
+    if engine == "scan":
+        from repro.obs import telemetry as obs_telemetry
+
+        tree.state = obs_telemetry.reset(tree.state)
     tree.results.clear()
     tree.items_ingested = 0
     tree.items_forwarded = [0] * len(tree.fanin)
@@ -345,8 +358,11 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
     ingest_truncation_warned = False
     t0 = time.time()
     if engine == "scan":
+        from repro.obs.trace import span
+
         for e in range(n_epochs):
-            b = S.batch_ingest(sources, epoch_t, tree.fanin[0], width)
+            with span("ingest", epoch=e):
+                b = S.batch_ingest(sources, epoch_t, tree.fanin[0], width)
             exact_sum += b.exact_sum
             exact_cnt += b.exact_count
             dropped = int((b.offered - b.counts).sum())
@@ -428,6 +444,21 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
     if controller is not None:
         extras["controller"] = trajectory
         extras["final_sample_sizes"] = list(tree.sample_sizes)
+    if engine == "scan" and getattr(tree.pipe, "telemetry_enabled", False):
+        from repro.obs.metrics import metrics_text
+        from repro.obs.telemetry import snapshot, tenant_rel_bounds
+        from repro.obs.trace import get_tracer
+
+        snap = snapshot(tree.state)
+        if snap is not None:
+            snap["slot_rel_bound_mean"] = np.asarray(
+                snap["slot_rel_bound_mean"]).tolist()
+            snap["tenant_rel_bounds"] = tenant_rel_bounds(tree.pipe,
+                                                          tree.state)
+            extras["telemetry"] = snap
+            extras["metrics"] = metrics_text(
+                pipeline=tree.pipe, state=tree.state, tracer=get_tracer(),
+                controller=controller)
     if return_stream:
         extras["stream_values"] = (np.concatenate(stream_v) if stream_v
                                    else np.zeros(0, np.float32))
@@ -484,7 +515,8 @@ def run_spmd_pipeline(specs, *, fraction: float = 0.1, ticks: int,
                       epoch_ticks: int | None = None,
                       target_rel_error: float | None = None,
                       max_fraction: float | None = None,
-                      warmup: bool = True):
+                      warmup: bool = True,
+                      telemetry: bool = False):
     """The §III-E pod-scale data plane end to end: stream → mesh →
     merged-summary query plane → per-window answers. Returns a dict in
     the ``run_pipeline`` report style.
@@ -513,7 +545,7 @@ def run_spmd_pipeline(specs, *, fraction: float = 0.1, ticks: int,
                       num_strata=len(specs), allocation=allocation,
                       seed=seed, mode=mode, sampler_backend=sampler_backend,
                       queries=queries, target_rel_error=target_rel_error,
-                      max_fraction=max_fraction)
+                      max_fraction=max_fraction, telemetry=telemetry)
     pipe = api.compile(spec, mesh=mesh)
     epoch_t = min(epoch_ticks or 32, ticks)
     n_epochs = -(-ticks // epoch_t)
@@ -543,22 +575,29 @@ def run_spmd_pipeline(specs, *, fraction: float = 0.1, ticks: int,
         state = pipe.init()
         pipe.trace_counter["traces"] = 0
 
+    from repro.obs import telemetry as obs_telemetry
+    from repro.obs.trace import span
+
+    state = obs_telemetry.reset(state)   # counters cover measured epochs
     results: list[dict] = []
     exact_sum, exact_cnt = 0.0, 0
     dispatches = 0
     t0 = time.time()
     for e in range(n_epochs):
-        v, s, c = src.batch(epoch_t, width)
-        exact_sum += float((v * (np.arange(width)[None, :]
-                                 < c[:, None])).sum())
-        exact_cnt += int(c.sum())
-        b = S.rows_to_interval_batch(v, s, c, len(specs))
+        with span("ingest", epoch=e):
+            v, s, c = src.batch(epoch_t, width)
+            exact_sum += float((v * (np.arange(width)[None, :]
+                                     < c[:, None])).sum())
+            exact_cnt += int(c.sum())
+            b = S.rows_to_interval_batch(v, s, c, len(specs))
         if pipe.plan is not None:
             # the tenant path folds the carried GLOBAL tick into the key,
             # so one key gives fresh randomness every epoch
-            state, wa = pipe.run_epoch(state, pipe.default_key, b,
-                                       budgets=[budget])
-            rows = pipe.rows(wa)
+            with span("epoch_dispatch", epoch=e):
+                state, wa = pipe.run_epoch(state, pipe.default_key, b,
+                                           budgets=[budget])
+            with span("block_until_ready"):
+                rows = pipe.rows(wa)
             if controller is not None and rows:
                 if hasattr(controller, "last_tenant"):
                     size, per = controller.update_from_windows(pipe.plan,
@@ -622,6 +661,20 @@ def run_spmd_pipeline(specs, *, fraction: float = 0.1, ticks: int,
     if controller is not None:
         out["controller"] = trajectory
         out["final_sample_sizes"] = [budget]
+    if telemetry and pipe.plan is not None:
+        from repro.obs.metrics import metrics_text
+        from repro.obs.telemetry import snapshot, tenant_rel_bounds
+        from repro.obs.trace import get_tracer
+
+        snap = snapshot(state)
+        if snap is not None:
+            snap["slot_rel_bound_mean"] = np.asarray(
+                snap["slot_rel_bound_mean"]).tolist()
+            snap["tenant_rel_bounds"] = tenant_rel_bounds(pipe, state)
+            out["telemetry"] = snap
+            out["metrics"] = metrics_text(
+                pipeline=pipe, state=state, tracer=get_tracer(),
+                controller=controller)
     return out
 
 
@@ -670,6 +723,14 @@ def main(argv=None):
                          "plane — only sketch summaries cross devices")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the result report to PATH (BENCH artifact)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the in-graph observability plane "
+                         "(repro.obs): the report/--json gains a "
+                         "'telemetry' snapshot and a Prometheus-text "
+                         "'metrics' block (scan engine and --mesh paths)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the host span tracer's Chrome/Perfetto "
+                         "trace.json to PATH (load in ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     specs = {
@@ -685,6 +746,9 @@ def main(argv=None):
         from repro.query.registry import QueryRegistry
 
         registry = QueryRegistry.from_tokens(args.queries)
+    if args.telemetry and args.mesh is None and args.engine != "scan":
+        # telemetry leaves live in the compiled runtimes' donated state
+        args.engine = "scan"
     if args.mesh is not None:
         r = run_spmd_pipeline(
             specs, fraction=args.fraction, ticks=args.ticks,
@@ -692,7 +756,7 @@ def main(argv=None):
             sampler_backend=args.backend, allocation=args.allocation,
             epoch_ticks=args.epoch_ticks,
             target_rel_error=args.target_rel_error,
-            max_fraction=args.max_fraction)
+            max_fraction=args.max_fraction, telemetry=args.telemetry)
     else:
         r = run_pipeline(specs, fraction=args.fraction, ticks=args.ticks,
                          allocation=args.allocation, mode=args.mode,
@@ -700,7 +764,8 @@ def main(argv=None):
                          warmup_ticks=2, epoch_ticks=args.epoch_ticks,
                          queries=registry,
                          target_rel_error=args.target_rel_error,
-                         max_fraction=args.max_fraction)
+                         max_fraction=args.max_fraction,
+                         telemetry=args.telemetry)
     print(f"dist={args.dist} mode={args.mode} engine={r['engine']} "
           f"backend={args.backend} fraction={r['fraction']:.0%}"
           + (f" mesh={r['n_devices']}dev" if args.mesh else ""))
@@ -738,6 +803,18 @@ def main(argv=None):
               f"{tr[-1]['size']} over {len(tr)} updates "
               f"(rel err {tr[0]['rel_error']:.4f}→{tr[-1]['rel_error']:.4f},"
               f" target {args.target_rel_error})")
+    if r.get("telemetry"):
+        tel = r["telemetry"]
+        fr = ", ".join(f"L{i}:{lv['effective_fraction']:.3f}"
+                       for i, lv in enumerate(tel["levels"]))
+        print(f"  telemetry      {tel['windows']} windows, realized ±2σ "
+              f"{tel['bound_2sigma']:.3e} "
+              f"(rel {tel['rel_bound_2sigma']:.4f}); eff fraction {fr}")
+    if args.trace:
+        from repro.obs.trace import get_tracer
+
+        get_tracer().save(args.trace)
+        print(f"  wrote {args.trace}")
     if args.json:
         import json
         import pathlib

@@ -28,6 +28,9 @@ from repro import api
 from repro.configs import registry
 from repro.data import stream as S
 from repro.models import model as M
+from repro.obs import telemetry as obs_telemetry
+from repro.obs.metrics import metrics_text
+from repro.obs.trace import get_tracer, span
 from repro.optim import train_step
 from repro.query.registry import QueryRegistry
 
@@ -45,8 +48,8 @@ def dashboard_registry() -> QueryRegistry:
             .register_quantile("latency_q_ms", qs=(0.5, 0.99), capacity=256))
 
 
-def telemetry_spec(capacity: int, fraction: float,
-                   seed: int = 0) -> api.PipelineSpec:
+def telemetry_spec(capacity: int, fraction: float, seed: int = 0,
+                   telemetry: bool = False) -> api.PipelineSpec:
     """The serving fleet's telemetry plane as one declarative spec:
     per-request records → 2 edge aggregators → 1 datacenter root, the
     dashboard as a query tenant on the shared tree."""
@@ -56,6 +59,7 @@ def telemetry_spec(capacity: int, fraction: float,
         sampler=api.SamplerSpec(mode="whs", backend="topk",
                                 fraction=fraction),
         tenants=(dashboard_registry().as_tenant("dashboard"),),
+        telemetry=api.TelemetrySpec(enabled=telemetry),
         seed=seed,
     )
 
@@ -86,7 +90,24 @@ def main(argv=None):
                          "merged sketch summaries — no raw records cross "
                          "devices. CPU: export XLA_FLAGS=--xla_force_"
                          "host_platform_device_count=N")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="carry EpochTelemetry counters inside the "
+                         "pipeline state (repro.obs) — sample state and "
+                         "dashboard answers stay bit-identical")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write a Prometheus-text metrics snapshot of the "
+                         "telemetry plane to PATH at exit (implies "
+                         "--telemetry)")
+    ap.add_argument("--metrics-every", type=int, default=None, metavar="N",
+                    help="print a metrics snapshot to stdout every N "
+                         "telemetry windows during the epoch (implies "
+                         "--telemetry; local path only)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the host span tracer's Chrome/Perfetto "
+                         "trace.json to PATH")
     args = ap.parse_args(argv)
+    if args.metrics_dump or args.metrics_every:
+        args.telemetry = True
 
     cfg = registry.get_config(args.arch)
     if args.smoke:
@@ -140,28 +161,36 @@ def main(argv=None):
     if args.mesh:
         from repro.launch.analytics import make_data_mesh
 
-        pipe = api.compile(telemetry_spec(capacity, args.telemetry_fraction),
+        pipe = api.compile(telemetry_spec(capacity, args.telemetry_fraction,
+                                          telemetry=args.telemetry),
                            mesh=make_data_mesh(args.mesh))
-        flat = S.ticks_to_ingest(tick_records, n_nodes=1, width=capacity)
-        width = -(-capacity // args.mesh) * args.mesh
-        batches = S.rows_to_interval_batch(
-            flat.values[:, 0], flat.strata[:, 0], flat.counts[:, 0],
-            NUM_CLASSES, width=width)
+        with span("ingest", ticks=len(tick_records)):
+            flat = S.ticks_to_ingest(tick_records, n_nodes=1, width=capacity)
+            width = -(-capacity // args.mesh) * args.mesh
+            batches = S.rows_to_interval_batch(
+                flat.values[:, 0], flat.strata[:, 0], flat.counts[:, 0],
+                NUM_CLASSES, width=width)
         state = pipe.init()
-        state, wa = pipe.run_epoch(state, pipe.default_key, batches)
+        with span("epoch_dispatch", ticks=len(tick_records)):
+            state, wa = pipe.run_epoch(state, pipe.default_key, batches)
+        with span("block_until_ready"):
+            jax.block_until_ready(wa)
     else:
-        pipe = api.compile(telemetry_spec(capacity,
-                                          args.telemetry_fraction))
+        pipe = api.compile(telemetry_spec(capacity, args.telemetry_fraction,
+                                          telemetry=args.telemetry))
         state = pipe.init()
-        batch = S.ticks_to_ingest(tick_records, n_nodes=EDGE_NODES,
-                                  width=capacity)
+        with span("ingest", ticks=len(tick_records)):
+            batch = S.ticks_to_ingest(tick_records, n_nodes=EDGE_NODES,
+                                      width=capacity)
         if args.hot_admit:
             from repro.api.pipeline import program_cache_stats
 
             h = max(1, len(tick_records) // 2)
-            state, waA = pipe.run_epoch(state, pipe.default_key,
-                                        batch.values[:h], batch.strata[:h],
-                                        batch.counts[:h])
+            with span("epoch_dispatch", ticks=h):
+                state, waA = pipe.run_epoch(state, pipe.default_key,
+                                            batch.values[:h],
+                                            batch.strata[:h],
+                                            batch.counts[:h])
             rows_a = pipe.rows(waA)
             m0 = program_cache_stats()["misses"]
             slo = (QueryRegistry().register_count("n")
@@ -171,9 +200,11 @@ def main(argv=None):
             # hot admit: slot edit on the carried state, answers resume
             # mid-stream — the dashboard tenant's sketches are untouched
             pipe2, state = pipe.admit(state, slo)
-            state, waB = pipe2.run_epoch(state, pipe2.default_key,
-                                         batch.values[h:], batch.strata[h:],
-                                         batch.counts[h:])
+            with span("epoch_dispatch", ticks=len(batch.values) - h):
+                state, waB = pipe2.run_epoch(state, pipe2.default_key,
+                                             batch.values[h:],
+                                             batch.strata[h:],
+                                             batch.counts[h:])
             rows_b = pipe2.rows(waB)
             m1 = program_cache_stats()["misses"]
             pipe3, state = pipe2.retire(state, "slo")
@@ -195,10 +226,30 @@ def main(argv=None):
             row_pipes = [pipe] * len(rows_a) + [pipe2] * len(rows_b)
             pipe = pipe4
         else:
-            state, wa = pipe.run_epoch(state, pipe.default_key, batch.values,
-                                       batch.strata, batch.counts)
-    if not (args.hot_admit and not args.mesh):
+            # --metrics-every N slices the epoch into N-tick chunks and
+            # exposes the /metrics surface between dispatches; without it
+            # the single chunk is the whole epoch (identical behaviour).
+            n_ticks = len(batch.values)
+            step = args.metrics_every or n_ticks
+            chunk_rows = []
+            for s0 in range(0, n_ticks, max(step, 1)):
+                s1 = min(s0 + max(step, 1), n_ticks)
+                with span("epoch_dispatch", ticks=s1 - s0):
+                    state, wa = pipe.run_epoch(
+                        state, pipe.default_key, batch.values[s0:s1],
+                        batch.strata[s0:s1], batch.counts[s0:s1])
+                with span("block_until_ready"):
+                    jax.block_until_ready(wa)
+                chunk_rows.extend(pipe.rows(wa))
+                if args.metrics_every:
+                    print(f"--- metrics after {s1}/{n_ticks} ticks ---")
+                    print(metrics_text(pipeline=pipe, state=state,
+                                       tracer=get_tracer()))
+    if args.mesh:
         rows = pipe.rows(wa)
+        row_pipes = [pipe] * len(rows)
+    elif not args.hot_admit:
+        rows = chunk_rows
         row_pipes = [pipe] * len(rows)
     # rows from before/after a hot admit carry different layouts — answer
     # each row through the pipeline that produced it
@@ -234,6 +285,21 @@ def main(argv=None):
           f"(exact {exact_mean:.2f})")
     print(f"  p50 / p99 ms     ≈ {float(p50):.2f} / {float(p99):.2f} "
           f"(sketch rank-ε {float(bnd('latency_q_ms', last)[0]):.3f})")
+    snap = obs_telemetry.snapshot(state)
+    if snap is not None:
+        print(f"  telemetry        {snap['windows']} windows, realized "
+              f"±2σ {snap['bound_2sigma']:.3e} "
+              f"(rel {snap['rel_bound_2sigma']:.4f})"
+              + (f", {snap['merge_bytes']:.0f} sketch bytes merged"
+                 if args.mesh else ""))
+    if args.metrics_dump:
+        text = metrics_text(pipeline=pipe, state=state, tracer=get_tracer())
+        with open(args.metrics_dump, "w") as f:
+            f.write(text)
+        print(f"  wrote {args.metrics_dump}")
+    if args.trace:
+        get_tracer().save(args.trace)
+        print(f"  wrote {args.trace}")
     return mean_est, exact_mean
 
 

@@ -1,0 +1,29 @@
+"""Observability plane: in-graph telemetry leaves, host span tracer,
+and the Prometheus-text exposition surface.
+
+Three layers, consumed independently or together:
+
+* ``obs.telemetry`` — ``EpochTelemetry``, the optional pytree of
+  counters carried inside the donated pipeline state and filled inside
+  the existing scan-tick / SPMD epoch at zero extra dispatches
+  (enabled by ``TelemetrySpec`` on the ``PipelineSpec``).
+* ``obs.trace`` — context-manager wall-time spans with Chrome/Perfetto
+  ``trace.json`` export and optional ``jax.profiler`` annotation.
+* ``obs.metrics`` — a counter/gauge registry that aggregates the two
+  layers plus the traced-program/plan caches into one
+  Prometheus-text-format snapshot.
+"""
+from repro.obs.telemetry import (EpochTelemetry, StragglerMonitor,
+                                 fold_stragglers, reset, snapshot)
+from repro.obs.trace import SpanTracer, get_tracer, span
+from repro.obs.metrics import (MetricsRegistry, metrics_text,
+                               parse_prometheus_text,
+                               render_pipeline_metrics)
+
+__all__ = [
+    "EpochTelemetry", "StragglerMonitor", "fold_stragglers", "reset",
+    "snapshot",
+    "SpanTracer", "get_tracer", "span",
+    "MetricsRegistry", "metrics_text", "parse_prometheus_text",
+    "render_pipeline_metrics",
+]

@@ -1,0 +1,263 @@
+"""Layer 1: in-graph epoch telemetry.
+
+``EpochTelemetry`` is a pytree of cumulative counters carried as an
+optional leaf of the donated pipeline state (``TreeState.telemetry`` on
+the local path, ``SpmdPipelineState.telemetry`` on the mesh). The scan
+tick / SPMD epoch fill it from quantities they already compute — level
+flush sizes, forwarded counts, the root ``SampleResult``'s per-stratum
+``c``/``y``, the plan's padded answer/bound vectors — so telemetry
+costs no extra dispatch and consumes no PRNG randomness: sample state
+and window answers are bit-identical with telemetry on or off (pinned
+in ``tests/test_observability.py``).
+
+Telemetry is OFF by default. ``TelemetrySpec(enabled=True)`` on the
+``PipelineSpec`` switches it on statically: the tick's telemetry update
+is compiled in (or out) at trace time, and the off-state leaf stays the
+empty tuple ``()`` so disabled pipelines carry zero extra leaves.
+
+Host-side counters that the device cannot observe (straggler deadline
+accounting, ``runtime.straggler``) fold into the same leaves between
+epochs via :func:`fold_stragglers` / :class:`StragglerMonitor` — a pure
+state edit, never a retrace.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+
+
+class EpochTelemetry(NamedTuple):
+    """Cumulative in-graph counters (leading semantics per field):
+
+    ``items_in``/``items_kept`` f32[n_levels] — items offered at each
+        level's flush vs. items the level forwarded (root: selected).
+    ``flushes`` i32[n_levels] — non-empty flushes per level.
+    ``saturation_hits`` i32[n_levels] — flushes where the level kept
+        every offered item (the WHS saturation fast path fired).
+    ``stratum_in``/``stratum_kept`` f32[num_strata] — the root
+        window's per-stratum counts ``c`` and kept ``y = min(c, N)``;
+        their ratio is the realized per-stratum sampling fraction.
+    ``windows`` i32[] — flushed root windows.
+    ``root_sum``/``root_sum_var`` f32[] — Σ window SUM estimates and
+        Σ window SUM variances; ``2·√(Σ var)`` is THE realized ±2σ
+        bound (the one place that math lives — examples print it from
+        here instead of recomputing).
+    ``slot_rel_bound_sum`` f32[n_slots] — Σ over windows of each
+        padded plan slot's ``bound/|answer|`` (CLT slots; sketch slots
+        accumulate their structural bounds). Divide by ``windows`` for
+        the per-tenant realized error-bound trajectory.
+    ``merge_bytes`` f32[] — SPMD path: sketch-summary bytes shipped
+        across the mesh axis (windows × the static per-window model
+        ``CompiledSpmdPipeline.summary_bytes_per_window``).
+    ``late_shards``/``widened_windows`` i32[] — host-folded straggler
+        accounting (see :class:`StragglerMonitor`).
+    """
+
+    items_in: Any
+    items_kept: Any
+    flushes: Any
+    saturation_hits: Any
+    stratum_in: Any
+    stratum_kept: Any
+    windows: Any
+    root_sum: Any
+    root_sum_var: Any
+    slot_rel_bound_sum: Any
+    merge_bytes: Any
+    late_shards: Any
+    widened_windows: Any
+
+    @staticmethod
+    def create(n_levels: int, num_strata: int,
+               n_slots: int) -> "EpochTelemetry":
+        """Fresh zeroed counters (``n_slots`` = the traced plan's PADDED
+        answer width, 0 without a plan)."""
+        import jax.numpy as jnp
+
+        f32 = jnp.float32
+        i32 = jnp.int32
+        return EpochTelemetry(
+            items_in=jnp.zeros((n_levels,), f32),
+            items_kept=jnp.zeros((n_levels,), f32),
+            flushes=jnp.zeros((n_levels,), i32),
+            saturation_hits=jnp.zeros((n_levels,), i32),
+            stratum_in=jnp.zeros((num_strata,), f32),
+            stratum_kept=jnp.zeros((num_strata,), f32),
+            windows=jnp.zeros((), i32),
+            root_sum=jnp.zeros((), f32),
+            root_sum_var=jnp.zeros((), f32),
+            slot_rel_bound_sum=jnp.zeros((n_slots,), f32),
+            merge_bytes=jnp.zeros((), f32),
+            late_shards=jnp.zeros((), i32),
+            widened_windows=jnp.zeros((), i32),
+        )
+
+
+def _leaf(state) -> "EpochTelemetry | None":
+    """Find the telemetry leaf on any state shape we hand out:
+    ``PipelineState`` (``.tree.telemetry``), ``SpmdPipelineState`` /
+    ``TreeState`` (``.telemetry``), or a bare ``EpochTelemetry``."""
+    if isinstance(state, EpochTelemetry):
+        return state
+    tree = getattr(state, "tree", None)
+    if tree is not None:
+        state = tree
+    tel = getattr(state, "telemetry", ())
+    return tel if isinstance(tel, EpochTelemetry) else None
+
+
+def snapshot(state) -> dict | None:
+    """Host-readable snapshot of a state's telemetry leaves, with the
+    derived signals every consumer wants: per-level and per-stratum
+    effective sampling fractions, the realized ±2σ SUM bound, and the
+    per-slot mean relative bounds. ``None`` when telemetry is disabled
+    (the leaf is ``()``)."""
+    tel = _leaf(state)
+    if tel is None:
+        return None
+    h = {f: np.asarray(v) for f, v in zip(EpochTelemetry._fields, tel)}
+    eps = 1e-9
+    levels = []
+    for l in range(h["items_in"].shape[0]):
+        i_in = float(h["items_in"][l])
+        i_kept = float(h["items_kept"][l])
+        levels.append({
+            "items_in": i_in, "items_kept": i_kept,
+            "flushes": int(h["flushes"][l]),
+            "saturation_hits": int(h["saturation_hits"][l]),
+            "effective_fraction": i_kept / max(i_in, eps),
+        })
+    strata = []
+    for s in range(h["stratum_in"].shape[0]):
+        s_in = float(h["stratum_in"][s])
+        s_kept = float(h["stratum_kept"][s])
+        strata.append({
+            "items_in": s_in, "items_kept": s_kept,
+            "effective_fraction": s_kept / max(s_in, eps),
+        })
+    windows = int(h["windows"])
+    total = float(h["root_sum"])
+    bound = 2.0 * float(np.sqrt(max(float(h["root_sum_var"]), 0.0)))
+    slot_rel = h["slot_rel_bound_sum"] / max(windows, 1)
+    return {
+        "levels": levels,
+        "strata": strata,
+        "windows": windows,
+        "sum_estimate": total,
+        "bound_2sigma": bound,
+        "rel_bound_2sigma": bound / max(abs(total), eps),
+        "slot_rel_bound_mean": slot_rel,
+        "merge_bytes": float(h["merge_bytes"]),
+        "late_shards": int(h["late_shards"]),
+        "widened_windows": int(h["widened_windows"]),
+    }
+
+
+def tenant_rel_bounds(pipeline, state) -> dict[str, float]:
+    """Per-tenant realized error bound from the telemetry leaves: each
+    tenant's WORST CLT (sum/mean) slot of the window-mean relative
+    bounds — the same attribution rule as ``query.compiler.
+    tenant_rel_errors``, but sourced from the cumulative in-graph
+    trajectory instead of one window's row."""
+    from repro.query.compiler import tenant_clt_slots
+
+    snap = snapshot(state)
+    plan = getattr(pipeline, "plan", None)
+    if snap is None or plan is None:
+        return {}
+    public = plan.compact(np.asarray(snap["slot_rel_bound_mean"]))
+    out = {t: 0.0 for t in plan.tenant_names}
+    for tenant, off in tenant_clt_slots(plan):
+        out[tenant] = max(out[tenant], float(public[off]))
+    return out
+
+
+def reset(state):
+    """Zero a state's telemetry counters in place (shape-preserving, no
+    retrace) — drivers call this after warmup so the counters cover only
+    the measured stream. No-op when telemetry is disabled."""
+    tel = _leaf(state)
+    if tel is None:
+        return state
+    import jax
+    import jax.numpy as jnp
+
+    return _replace_leaf(state, jax.tree.map(jnp.zeros_like, tel))
+
+
+def _replace_leaf(state, tel: EpochTelemetry):
+    tree = getattr(state, "tree", None)
+    if tree is not None:
+        return state._replace(tree=tree._replace(telemetry=tel))
+    return state._replace(telemetry=tel)
+
+
+def fold_stragglers(state, late_shards: int, widened_windows: int):
+    """Fold host-side straggler accounting into the telemetry leaves —
+    a pure eager state edit (no retrace; the leaves keep their shapes).
+    No-op when telemetry is disabled."""
+    tel = _leaf(state)
+    if tel is None or (not late_shards and not widened_windows):
+        return state
+    import jax.numpy as jnp
+
+    tel = tel._replace(
+        late_shards=tel.late_shards + jnp.int32(int(late_shards)),
+        widened_windows=tel.widened_windows + jnp.int32(
+            int(widened_windows)))
+    return _replace_leaf(state, tel)
+
+
+class StragglerMonitor:
+    """Wires ``runtime.straggler``'s deadline accounting into the
+    telemetry plane (ROADMAP item 1's signal).
+
+    Feed per-shard (edge-node / device) arrival latencies each window
+    via :meth:`observe`; it returns the present-mask from
+    ``DeadlineTracker`` and accumulates a late-shard counter plus a
+    widened-bound flag (a window published with absent shards has its
+    bounds widened by the Eq. 9 ``1/α`` recalibration —
+    ``straggler.calibrate_weights``). :meth:`fold_into` moves the
+    accumulated deltas into a pipeline state's telemetry leaves, and
+    the exposition layer reports the running totals either way."""
+
+    def __init__(self, num_shards: int, cfg=None):
+        from repro.runtime.straggler import DeadlineTracker, StragglerConfig
+
+        self.cfg = cfg or StragglerConfig()
+        self.tracker = DeadlineTracker(int(num_shards), self.cfg)
+        self.late_shards_total = 0
+        self.widened_windows_total = 0
+        self._pending_late = 0
+        self._pending_widened = 0
+
+    def observe(self, shard_latencies) -> np.ndarray:
+        """Record one window's per-shard latencies; returns the
+        present-mask (all-true when below quorum — the tracker waits
+        rather than bias hard)."""
+        lat = np.asarray(shard_latencies, np.float64)
+        present = self.tracker.observe(lat)
+        late = int((~present).sum())
+        self.late_shards_total += late
+        self._pending_late += late
+        if late > 0:
+            self.widened_windows_total += 1
+            self._pending_widened += 1
+        return present
+
+    def calibrate(self, weight: np.ndarray,
+                  present: np.ndarray) -> np.ndarray:
+        """Eq. 9 weight recalibration for the arrived shards (the
+        widened-bound correction) — ``straggler.calibrate_weights``."""
+        from repro.runtime.straggler import calibrate_weights
+
+        return calibrate_weights(weight, present)
+
+    def fold_into(self, state):
+        """Apply the deltas accumulated since the last fold to a
+        pipeline state's telemetry leaves; returns the (possibly
+        unchanged) state."""
+        late, widened = self._pending_late, self._pending_widened
+        self._pending_late = self._pending_widened = 0
+        return fold_stragglers(state, late, widened)

@@ -803,15 +803,27 @@ def tenant_rel_errors(plan, answers_row, bounds_row,
     method and the analytics feedback loop both call this."""
     answers_row = np.asarray(answers_row)
     bounds_row = np.asarray(bounds_row)
+    out = {t: 0.0 for t in
+           (plan.tenant_names if hasattr(plan, "tenant_names")
+            else (default_tenant,))}
+    for tenant, off in tenant_clt_slots(plan, default_tenant):
+        est = abs(float(answers_row[..., off]))
+        rel = float(bounds_row[..., off]) / max(est, 1e-9)
+        out[tenant] = max(out[tenant], rel)
+    return out
+
+
+def tenant_clt_slots(plan, default_tenant: str = "default"):
+    """Yield ``(tenant, public_offset)`` for every CLT (sum/mean) query
+    slot — THE tenant-attribution rule, shared by
+    :func:`tenant_rel_errors` (one window's row) and
+    ``repro.obs.telemetry.tenant_rel_bounds`` (the cumulative in-graph
+    trajectory). Sketch slots carry structural bounds and are skipped."""
     multi = hasattr(plan, "tenant_names")
     names = plan.tenant_names if multi else (default_tenant,)
-    out = {t: 0.0 for t in names}
     for name, (off, _, kind) in plan.layout().items():
         if kind not in ("sum", "mean"):
             continue
         tenant = name.split("/", 1)[0] if (multi and "/" in name) \
             else names[0]
-        est = abs(float(answers_row[..., off]))
-        rel = float(bounds_row[..., off]) / max(est, 1e-9)
-        out[tenant] = max(out[tenant], rel)
-    return out
+        yield tenant, off

@@ -30,10 +30,17 @@ class BudgetController:
         self.size = float(initial_size)
         self._i_lat = 0.0
         self._i_err = 0.0
+        # last observed inputs, surfaced by repro.obs.metrics
+        self.last_latency_s: float | None = None
+        self.last_rel_error: float | None = None
 
     def update(self, *, latency_s: float | None = None,
                rel_error: float | None = None) -> int:
         c = self.cfg
+        if latency_s is not None:
+            self.last_latency_s = float(latency_s)
+        if rel_error is not None:
+            self.last_rel_error = float(rel_error)
         scale = 0.0
         if c.target_latency_s is not None and latency_s is not None:
             # positive err → too slow → shrink the sample
