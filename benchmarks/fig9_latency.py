@@ -7,9 +7,20 @@ length of every level with fraction fixed at 10%: ApproxIoT's latency
 grows with the window (it must wait for the interval to close before
 sampling) while SRS — windowless coin-flip — stays flat; this reproduces
 the paper's observation.
+
+``run_serve`` is the serve-plane companion (PR 9): the SAME latency
+question asked of the always-on ``repro.serve.StreamingExecutor`` —
+end-to-end window latency (item arrival → published answer) and its p99
+under an offered-load sweep, with the measured ingest/dispatch overlap
+and drop accounting riding along. Recorded as a ``BENCH_fig9.json``
+trajectory entry via ``record_serve``.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+
+from repro import api
 from repro.data import stream as S
 from repro.launch.analytics import run_pipeline
 
@@ -23,6 +34,82 @@ TICKS = 8
 # (§V-A methodology) — processing, not WAN RTT, dominates native latency.
 # Emulate with a heavy per-tick volume.
 RATES = (16_000, 16_000, 16_000, 16_000)
+
+# Serve-plane sweep: total offered items per pump tick (split over the
+# 2 edge shards), pumped flat-out with no pacing sleep.
+SERVE_LOADS = (256, 1024, 4096)
+SERVE_TICKS = 64
+SERVE_EPOCH_TICKS = 8
+SERVE_WIDTH = 2048            # staging width ≥ max per-shard tick load
+
+
+def _serve_pipeline():
+    from repro.query.registry import QueryRegistry
+    reg = (QueryRegistry()
+           .register_count("n")
+           .register_sum("total")
+           .register_quantile("q", qs=(0.5, 0.99), capacity=128))
+    spec = api.PipelineSpec(
+        topology=api.TopologySpec(fanin=(2, 1), capacity=256, num_strata=4),
+        sampler=api.SamplerSpec(mode="whs", backend="topk", fraction=0.1),
+        tenants=(reg.as_tenant("bench"),), seed=0)
+    return api.compile(spec)
+
+
+def run_serve(loads=SERVE_LOADS, ticks=SERVE_TICKS) -> list[dict]:
+    """Offered-load sweep through the streaming executor: arrival →
+    published-answer latency (p50/p99), measured ingest/dispatch overlap,
+    and drop accounting. One pipeline (one XLA program) serves every load
+    level; only the source rates change."""
+    from repro.serve import StreamingExecutor, SyntheticSource
+
+    pipe = _serve_pipeline()
+    rows = []
+    for load in loads:
+        per_class = max(1, load // (2 * len(S.GAUSSIAN)))
+        specs = S.paper_gaussian(rates=(per_class,) * len(S.GAUSSIAN))
+        sources = [SyntheticSource(shard, specs=specs, seed=shard)
+                   for shard in (0, 1)]
+        ex = StreamingExecutor(epoch_ticks=SERVE_EPOCH_TICKS,
+                               width=SERVE_WIDTH,
+                               queue_capacity=4 * SERVE_WIDTH,
+                               policy="drop_oldest")
+        ex.start(pipe, sources)
+        with common.Timer() as t:
+            ex.run(ticks)
+            summary = ex.stop()
+        rows.append({
+            "offered_per_tick": load,
+            "windows": summary["windows_published"],
+            "p50_ms": summary["latency_p50"] * 1e3,
+            "p99_ms": summary["latency_p99"] * 1e3,
+            "overlap_fraction": summary["overlap_fraction"],
+            "dropped": summary["queue_items_dropped"],
+            "ingest_items_s": summary["queue_items_in"] / t.s,
+        })
+    common.table("Fig. 9b serve-plane window latency vs offered load", rows)
+    print("always-on executor: latency is epoch-paced, not load-paced — "
+          f"p99 {rows[0]['p99_ms']:.0f} ms at {rows[0]['offered_per_tick']} "
+          f"items/tick vs {rows[-1]['p99_ms']:.0f} ms at "
+          f"{rows[-1]['offered_per_tick']}")
+    return rows
+
+
+def record_serve(rows: list[dict], label: str = "pr9-serve-executor",
+                 notes: str = "") -> pathlib.Path:
+    """Append a trajectory entry to BENCH_fig9.json (created on first
+    use), mirroring the BENCH_fig7 format."""
+    path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fig9.json"
+    data = json.loads(path.read_text()) if path.exists() else {"runs": []}
+    data["runs"].append({
+        "label": label,
+        "notes": notes or ("serve-plane offered-load sweep: arrival->publish "
+                           "latency through the always-on StreamingExecutor"),
+        "fig9_serve": {"ok": True, "rows": rows,
+                       "run_metadata": common.run_metadata()},
+    })
+    path.write_text(json.dumps(data, indent=1, default=str) + "\n")
+    return path
 
 
 def run() -> list[dict]:
@@ -65,8 +152,11 @@ def run() -> list[dict]:
     print("paper: ApproxIoT latency grows with window; SRS flat — "
           f"ours whs {wrows[0]['whs_ms']:.0f}→{wrows[-1]['whs_ms']:.0f} ms, "
           f"srs {wrows[0]['srs_ms']:.0f}→{wrows[-1]['srs_ms']:.0f} ms")
+    srows = run_serve(loads=SERVE_LOADS[:1] if common.QUICK else SERVE_LOADS,
+                      ticks=16 if common.QUICK else SERVE_TICKS)
+    common.save("fig9_serve", srows)
     common.save("fig9_latency", rows + wrows)
-    return rows + wrows
+    return rows + wrows + srows
 
 
 if __name__ == "__main__":

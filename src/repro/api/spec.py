@@ -493,7 +493,7 @@ def validate(spec: PipelineSpec) -> None:
         target = float(budget.target_rel_error)
         for t in spec.tenants:
             for q in t.queries:
-                if q.kind != "quantile":
+                if q.kind not in ("quantile", "windowed_quantile"):
                     continue
                 floor = quantile_rank_error_bound(q.capacity)
                 _require(floor <= target,

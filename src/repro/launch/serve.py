@@ -1,19 +1,29 @@
-"""Serving launcher: batched prefill + decode with approximate telemetry.
+"""Serving launcher: the ApproxIoT telemetry plane over an inference
+fleet, in two modes.
 
-The request stream is the ApproxIoT input: per-request latency/token
-records form sub-streams (stratified by request class), and the serving
-dashboard runs on a REAL compiled pipeline — each serving batch's
-telemetry is one tick of ingest into the emulated edge hierarchy
-(edge aggregators → datacenter root), where the dashboard's standing
-queries (request count → QPS, mean latency, p50/p99 via the quantile
-sketch) are a query **tenant** answered at the root every window from
-the weighted hierarchical sample. One ``PipelineSpec`` declares the
-whole thing; ``repro.api.compile`` runs it in one fused dispatch per
-epoch. The paper's analytics plane applied to an inference fleet,
-end to end: telemetry → hierarchy → query plane → dashboard.
+**One-shot** (default): batched prefill + decode, then every serving
+batch's per-request latency records become one tick of ingest into the
+emulated edge hierarchy (edge aggregators → datacenter root) on a REAL
+compiled pipeline, where the dashboard's standing queries (request
+count → QPS, mean latency, p50/p99 via the quantile sketch) are a query
+**tenant** answered at the root every window. One ``PipelineSpec``
+declares the whole thing; one fused dispatch runs the epoch.
+
+**Continuous** (``--serve-loop``): the same telemetry plane behind the
+always-on ``repro.serve.StreamingExecutor`` — subscribed sources feed
+bounded per-shard queues (``--backpressure`` policy), ingest
+double-buffers against the in-flight device epoch, and every root
+window publishes straggler-tolerantly: late shards yield *partial*
+answers with Eq. 9-widened bounds and their data folds into the next
+window. The loop registry adds the serve plane's recency queries
+(sliding-window quantiles, decayed heavy hitters); ``stop()`` drains
+the queues clean. ``--inject-straggler`` forces one edge shard late for
+an epoch to demonstrate the partial-window path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
         --requests 64 --decode-len 16
+    PYTHONPATH=src python -m repro.launch.serve --serve-loop --duration 5 \
+        --smoke --inject-straggler
 """
 from __future__ import annotations
 
@@ -48,17 +58,31 @@ def dashboard_registry() -> QueryRegistry:
             .register_quantile("latency_q_ms", qs=(0.5, 0.99), capacity=256))
 
 
+def serve_registry(window: int = 4) -> QueryRegistry:
+    """The continuous dashboard: everything the one-shot dashboard
+    answers plus the serve plane's recency queries — "last ``window``
+    windows" latency quantiles and exponentially decayed hot-class
+    counts (a stream-so-far sketch never forgets old load)."""
+    return (dashboard_registry()
+            .register_windowed_quantile("latency_q_recent_ms",
+                                        qs=(0.5, 0.99), capacity=128,
+                                        window=window)
+            .register_decayed_heavy_hitters("hot_latency_keys", k=4,
+                                            width=256, decay=0.8))
+
+
 def telemetry_spec(capacity: int, fraction: float, seed: int = 0,
-                   telemetry: bool = False) -> api.PipelineSpec:
+                   telemetry: bool = False,
+                   registry_fn=dashboard_registry) -> api.PipelineSpec:
     """The serving fleet's telemetry plane as one declarative spec:
     per-request records → 2 edge aggregators → 1 datacenter root, the
-    dashboard as a query tenant on the shared tree."""
+    dashboard (``registry_fn()``) as a query tenant on the shared tree."""
     return api.PipelineSpec(
         topology=api.TopologySpec(fanin=(EDGE_NODES, 1), capacity=capacity,
                                   num_strata=NUM_CLASSES),
         sampler=api.SamplerSpec(mode="whs", backend="topk",
                                 fraction=fraction),
-        tenants=(dashboard_registry().as_tenant("dashboard"),),
+        tenants=(registry_fn().as_tenant("dashboard"),),
         telemetry=api.TelemetrySpec(enabled=telemetry),
         seed=seed,
     )
@@ -105,9 +129,44 @@ def main(argv=None):
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write the host span tracer's Chrome/Perfetto "
                          "trace.json to PATH")
+    ap.add_argument("--serve-loop", action="store_true",
+                    help="continuous mode: run the telemetry plane behind "
+                         "the always-on repro.serve.StreamingExecutor "
+                         "(bounded queues, double-buffered ingest, "
+                         "straggler-tolerant windows) instead of one "
+                         "one-shot epoch; --requests/--batch set the "
+                         "epoch length in ticks")
+    ap.add_argument("--duration", type=float, default=5.0, metavar="SEC",
+                    help="serve-loop: wall-clock seconds to pump before "
+                         "draining")
+    ap.add_argument("--tick-interval", type=float, default=0.02,
+                    metavar="SEC",
+                    help="serve-loop: target seconds between pumps")
+    ap.add_argument("--backpressure", default="block",
+                    choices=("block", "drop_oldest", "degrade"),
+                    help="serve-loop: bounded-queue policy when ingest "
+                         "outruns the device")
+    ap.add_argument("--queue-capacity", type=int, default=4096,
+                    help="serve-loop: per-shard bounded queue capacity")
+    ap.add_argument("--inject-straggler", action="store_true",
+                    help="serve-loop: hold one edge shard's deliveries "
+                         "for a full epoch so partial windows with "
+                         "widened bounds publish, then fold the late "
+                         "data into the next window")
     args = ap.parse_args(argv)
     if args.metrics_dump or args.metrics_every:
         args.telemetry = True
+
+    # Requests are served (and in loop mode, staged) in whole batches —
+    # the same check guards both modes with the same actionable error.
+    n_batches = args.requests // args.batch
+    if n_batches == 0:
+        ap.error(f"--requests {args.requests} < --batch {args.batch}: "
+                 f"no serving batch would run (requests are served in "
+                 f"whole batches)")
+
+    if args.serve_loop:
+        return _serve_loop(args)
 
     cfg = registry.get_config(args.arch)
     if args.smoke:
@@ -121,11 +180,6 @@ def main(argv=None):
     rng = np.random.default_rng(0)
     tick_records: list[tuple[np.ndarray, np.ndarray]] = []
     t_all = time.time()
-    n_batches = args.requests // args.batch
-    if n_batches == 0:
-        ap.error(f"--requests {args.requests} < --batch {args.batch}: "
-                 f"no serving batch would run (requests are served in "
-                 f"whole batches)")
     for b in range(n_batches):
         toks = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
         cache = M.init_cache(cfg, args.batch, max_len)
@@ -301,6 +355,96 @@ def main(argv=None):
         get_tracer().save(args.trace)
         print(f"  wrote {args.trace}")
     return mean_est, exact_mean
+
+
+def _serve_loop(args):
+    """Continuous mode: the telemetry plane behind the streaming
+    executor (see module doc). Returns the executor's final stats."""
+    from repro.serve import (LateShardSource, StreamingExecutor,
+                             SyntheticSource)
+
+    epoch_ticks = args.requests // args.batch
+    capacity = max(64, args.batch)
+    pipe = api.compile(telemetry_spec(capacity, args.telemetry_fraction,
+                                      telemetry=args.telemetry,
+                                      registry_fn=serve_registry))
+    # Per-shard synthetic request-latency sources: NUM_CLASSES request
+    # classes with distinct latency profiles (ms); class = stratum.
+    per_class = max(2, args.batch // (EDGE_NODES * NUM_CLASSES))
+    sources = [SyntheticSource(
+        shard, specs=[S.SubstreamSpec("gaussian",
+                                      (20.0 * 2 ** c, 2.0 * 2 ** c),
+                                      per_class)
+                      for c in range(NUM_CLASSES)], seed=shard)
+        for shard in range(EDGE_NODES)]
+    if args.inject_straggler:
+        # Hold the last shard's deliveries for one full epoch starting
+        # at the second: the affected windows publish partial (widened
+        # bounds) and the backlog folds into the following window.
+        sources[-1] = LateShardSource(sources[-1], epoch_ticks,
+                                      2 * epoch_ticks)
+    ex = StreamingExecutor(epoch_ticks=epoch_ticks, width=capacity,
+                           queue_capacity=args.queue_capacity,
+                           policy=args.backpressure)
+    ex.start(pipe, sources)
+    t0 = time.time()
+    ticks = 0
+    with span("serve_loop", duration=args.duration):
+        while time.time() - t0 < args.duration:
+            tick_t0 = time.time()
+            ex.pump()
+            ticks += 1
+            sleep = args.tick_interval - (time.time() - tick_t0)
+            if sleep > 0:
+                time.sleep(sleep)
+    summary = ex.stop()
+    wall = time.time() - t0
+    print(f"serve-loop: {ticks} ticks in {wall:.1f}s — "
+          f"{summary['epochs']} epochs of {epoch_ticks} ticks, "
+          f"backpressure={args.backpressure}"
+          + (", straggler injected" if args.inject_straggler else ""))
+    print(f"  windows published    {summary['windows_published']} "
+          f"({summary['windows_partial']} partial, bounds widened 1/α)")
+    print(f"  queue accounting     in {summary['queue_items_in']}, "
+          f"dropped {summary['queue_items_dropped']}, deferred "
+          f"{summary['queue_deferred']}, high-watermark "
+          f"{summary['queue_high_watermark']}, drained to depth "
+          f"{max(summary['queue_depth'], default=0)}")
+    print(f"  ingest/dispatch overlap {summary['overlap_fraction']:.2f} "
+          f"(measured while a device epoch was in flight)")
+    print(f"  window latency       p50 {summary['latency_p50'] * 1e3:.1f} "
+          f"ms / p99 {summary['latency_p99'] * 1e3:.1f} ms "
+          f"(arrival → published answer)")
+    if ex.published:
+        last = ex.published[-1]
+        p50, p99 = last.raw["answers"][
+            slice(*_qslice(pipe, "latency_q_ms"))]
+        r50, r99 = last.raw["answers"][
+            slice(*_qslice(pipe, "latency_q_recent_ms"))]
+        print(f"  latency p50/p99 ms   stream-so-far ≈ {float(p50):.1f} / "
+              f"{float(p99):.1f}; recent windows ≈ {float(r50):.1f} / "
+              f"{float(r99):.1f}")
+    snap = obs_telemetry.snapshot(ex.state)
+    if snap is not None:
+        print(f"  telemetry            {snap['late_shards']} late shards, "
+              f"{snap['widened_windows']} widened windows "
+              f"(in-graph counters)")
+    if args.metrics_dump:
+        text = metrics_text(pipeline=pipe, state=ex.state,
+                            tracer=get_tracer(), straggler=ex.monitor,
+                            executor=ex)
+        with open(args.metrics_dump, "w") as f:
+            f.write(text)
+        print(f"  wrote {args.metrics_dump}")
+    if args.trace:
+        get_tracer().save(args.trace)
+        print(f"  wrote {args.trace}")
+    return summary
+
+
+def _qslice(pipe, name: str) -> tuple[int, int]:
+    o, w, _ = pipe.query_layout()[name]
+    return o, o + w
 
 
 if __name__ == "__main__":

@@ -158,11 +158,14 @@ def _split_labels(s: str) -> list[str]:
 
 def render_pipeline_metrics(pipeline=None, state=None, tracer=None,
                             controller=None, straggler=None,
+                            executor=None,
                             extra: dict | None = None) -> MetricsRegistry:
     """Aggregate every observability source into one registry.
 
-    All arguments optional — pass what the caller has. ``extra`` is a
-    flat ``{gauge_name: value}`` dict for driver-specific numbers
+    All arguments optional — pass what the caller has. ``executor`` is a
+    ``repro.serve.StreamingExecutor`` (anything with a compatible
+    ``stats()`` dict) and adds the ``repro_serve_*`` families. ``extra``
+    is a flat ``{gauge_name: value}`` dict for driver-specific numbers
     (throughput, ticks, ...).
     """
     from repro.obs.telemetry import snapshot, tenant_rel_bounds
@@ -303,14 +306,52 @@ def render_pipeline_metrics(pipeline=None, state=None, tracer=None,
                     straggler.widened_windows_total,
                     "StragglerMonitor running widened-window total")
 
+    if executor is not None:
+        st = executor.stats()
+        for shard, depth in enumerate(st["queue_depth"]):
+            reg.gauge("repro_serve_queue_depth", depth,
+                      "Current bounded ingest-queue depth per shard",
+                      shard=str(shard))
+        reg.gauge("repro_serve_queue_high_watermark",
+                  st["queue_high_watermark"],
+                  "Deepest any shard queue has been")
+        reg.counter("repro_serve_queue_items_total", st["queue_items_in"],
+                    "Items admitted into the shard queues")
+        reg.counter("repro_serve_queue_dropped_total",
+                    st["queue_items_dropped"],
+                    "Items shed by the backpressure policy")
+        reg.counter("repro_serve_queue_deferred_total", st["queue_deferred"],
+                    "Offers refused by a full queue (policy=block)")
+        reg.counter("repro_serve_staged_items_total", st["staged_items"],
+                    "Items staged into epoch host buffers")
+        reg.counter("repro_serve_truncated_items_total",
+                    st["truncated_items"],
+                    "Items prefix-truncated at the staging width")
+        reg.gauge("repro_serve_ingest_overlap_fraction",
+                  st["overlap_fraction"],
+                  "Measured share of ingest time overlapping an "
+                  "in-flight device epoch")
+        reg.counter("repro_serve_windows_published_total",
+                    st["windows_published"],
+                    "Windows published by the serve plane")
+        reg.counter("repro_serve_windows_partial_total",
+                    st["windows_partial"],
+                    "Windows published partial (late shards or shed "
+                    "load; bounds widened by 1/alpha)")
+        for q, v in (("p50", st["latency_p50"]), ("p99", st["latency_p99"])):
+            reg.gauge("repro_serve_window_latency_seconds", v,
+                      "Arrival-to-publish window latency", quantile=q)
+
     for name, value in (extra or {}).items():
         reg.gauge(name, float(value))
     return reg
 
 
 def metrics_text(pipeline=None, state=None, tracer=None, controller=None,
-                 straggler=None, extra: dict | None = None) -> str:
+                 straggler=None, executor=None,
+                 extra: dict | None = None) -> str:
     """One-call Prometheus-text snapshot of everything observable."""
     return render_pipeline_metrics(
         pipeline=pipeline, state=state, tracer=tracer,
-        controller=controller, straggler=straggler, extra=extra).to_text()
+        controller=controller, straggler=straggler, executor=executor,
+        extra=extra).to_text()

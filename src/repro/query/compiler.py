@@ -40,6 +40,10 @@ from repro.query.registry import QuerySpec
 _QUERY_KEY_TAG = 0x51C7
 # fold_in tag for the replicated cross-device merge randomness (SPMD path)
 _MERGE_KEY_TAG = 0x4D52
+# fold_in tag for the windowed-quantile ring's query-time merge randomness
+# (a side branch of the per-query key, so the ring update stream is
+# untouched by how often the ring is queried)
+_WINDOW_MERGE_TAG = 0x574D
 
 
 class CompiledQueryPlan:
@@ -75,8 +79,11 @@ class CompiledQueryPlan:
         for sp in self.specs:
             if sp.kind == "quantile":
                 state.append(sketches.quantile_init(sp.capacity))
-            elif sp.kind == "heavy_hitters":
+            elif sp.kind in ("heavy_hitters", "decayed_heavy_hitters"):
                 state.append(sketches.hh_init(sp.k, sp.width, sp.depth))
+            elif sp.kind == "windowed_quantile":
+                state.append(sketches.windowed_quantile_init(sp.capacity,
+                                                             sp.window))
             else:
                 state.append(())
         return tuple(state)
@@ -124,6 +131,23 @@ class CompiledQueryPlan:
             elif sp.kind == "heavy_hitters":
                 keys = sketches.hh_item_key(batch.value)
                 st2 = sketches.hh_update(st, keys, w_item)
+                eps_w = sketches.hh_error_bound(sp.width, st2.total_weight)
+                a = jnp.concatenate([st2.key.astype(jnp.float32), st2.est])
+                b = jnp.concatenate([jnp.zeros((sp.k,), jnp.float32),
+                                     jnp.full((sp.k,), 1.0) * eps_w])
+            elif sp.kind == "windowed_quantile":
+                # one window → one ring slot; the query-time merge over
+                # the last `window` slots answers "last N windows", which
+                # a stream-so-far quantile sketch cannot.
+                st2 = sketches.windowed_quantile_update(kq, st, batch.value,
+                                                        w_item)
+                km = jax.random.fold_in(kq, _WINDOW_MERGE_TAG)
+                merged = sketches.windowed_quantile_merged(km, st2)
+                a = sketches.quantile_query(merged, jnp.asarray(sp.qs))
+                b = jnp.full((len(sp.qs),), 1.0) * merged.rank_error_bound
+            elif sp.kind == "decayed_heavy_hitters":
+                keys = sketches.hh_item_key(batch.value)
+                st2 = sketches.hh_decayed_update(st, keys, w_item, sp.decay)
                 eps_w = sketches.hh_error_bound(sp.width, st2.total_weight)
                 a = jnp.concatenate([st2.key.astype(jnp.float32), st2.est])
                 b = jnp.concatenate([jnp.zeros((sp.k,), jnp.float32),
@@ -225,6 +249,38 @@ class CompiledQueryPlan:
                 a = jnp.concatenate([mk.astype(jnp.float32), me])
                 b = jnp.concatenate([jnp.zeros((sp.k,), jnp.float32),
                                      jnp.full((sp.k,), 1.0) * eps_w])
+            elif sp.kind == "windowed_quantile":
+                st2 = sketches.windowed_quantile_update(kq_local, st,
+                                                        batch.value, w_item)
+                # all-gather the per-device rings and flatten device×slot
+                # into one stacked axis — one merge pass answers over the
+                # union of every device's last `window` sub-sketches.
+                gv = jax.lax.all_gather(st2.value, axis_name)
+                gw = jax.lax.all_gather(st2.weight, axis_name)
+                gc = jax.lax.all_gather(st2.compactions, axis_name)
+                ge = jax.lax.all_gather(st2.err_q2, axis_name)
+                stacked = sketches.QuantileSketch(
+                    value=gv.reshape((-1,) + gv.shape[-2:]),
+                    weight=gw.reshape((-1,) + gw.shape[-2:]),
+                    compactions=gc.reshape(-1),
+                    err_q2=ge.reshape(-1))
+                km = jax.random.fold_in(kq_merge, _WINDOW_MERGE_TAG)
+                merged = sketches.quantile_merge_stacked(km, stacked)
+                a = sketches.quantile_query(merged, jnp.asarray(sp.qs))
+                b = jnp.full((len(sp.qs),), 1.0) * merged.rank_error_bound
+            elif sp.kind == "decayed_heavy_hitters":
+                # decay is linear, so psum of per-device decayed tables
+                # equals the decayed global table: γ(ΣA_i) + Σa_i.
+                keys = sketches.hh_item_key(batch.value)
+                st2 = sketches.hh_decayed_update(st, keys, w_item, sp.decay)
+                g_counts = jax.lax.psum(st2.counts, axis_name)
+                g_keys = jax.lax.all_gather(st2.key, axis_name, tiled=True)
+                mk, me = sketches._refresh_topk(g_counts, g_keys, sp.k)
+                eps_w = sketches.hh_error_bound(sp.width,
+                                                jnp.sum(g_counts[0]))
+                a = jnp.concatenate([mk.astype(jnp.float32), me])
+                b = jnp.concatenate([jnp.zeros((sp.k,), jnp.float32),
+                                     jnp.full((sp.k,), 1.0) * eps_w])
             else:  # pragma: no cover — registry validates kinds
                 raise AssertionError(sp.kind)
             outs.append(a.astype(jnp.float32))
@@ -270,7 +326,14 @@ class CompiledQueryPlan:
             elif sp.kind == "quantile":
                 out[o:o + w] = np.quantile(values, np.asarray(sp.qs),
                                            method="inverted_cdf")
-            elif sp.kind == "heavy_hitters":
+            elif sp.kind in ("heavy_hitters", "decayed_heavy_hitters",
+                             "windowed_quantile"):
+                # sketch-relative answers: hh slots report the sketch's
+                # own candidate keys, and the windowed/decayed variants
+                # answer over the RECENT stream — a full-stream exact
+                # value is the wrong ground truth for all three. Slice
+                # the recent stream (or per-key counts) on the host when
+                # truth is needed.
                 out[o:o + w] = np.nan
         return out
 

@@ -20,6 +20,14 @@ in the plan's flat answer vector):
                                   sketch's live rank-error ε
     heavy_hitters        2·k      [k keys (as f32), k count estimates];
                                   bound on the estimate slots = CM ε·W
+    windowed_quantile    len(qs)  value at each quantile over the LAST
+                                  ``window`` root windows (ring of KLL
+                                  sub-sketches merged per query); bound =
+                                  the merged summary's rank-error ε
+    decayed_heavy_hitters 2·k     like heavy_hitters with counts decayed
+                                  ``γ = decay`` per window — recent-stream
+                                  top-k; bound = CM ε on the decayed
+                                  total weight
 
 Caveat: heavy-hitter keys ride the f32 answer vector, which is exact
 only for |key| ≤ 2²⁴ (and turns an empty slot's sentinel into 2³¹);
@@ -32,7 +40,8 @@ import dataclasses
 
 
 VALID_KINDS = ("sum", "count", "mean", "histogram", "quantile",
-               "heavy_hitters")
+               "heavy_hitters", "windowed_quantile",
+               "decayed_heavy_hitters")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,13 +52,17 @@ class QuerySpec:
     lo: float = 0.0
     hi: float = 1.0
     bins: int = 32
-    # quantile sketch
+    # quantile sketch (also windowed_quantile)
     qs: tuple = ()
     capacity: int = 256
-    # heavy hitters
+    # heavy hitters (also decayed_heavy_hitters)
     k: int = 8
     width: int = 1024
     depth: int = 4
+    # windowed_quantile: sliding-window span in root windows
+    window: int = 8
+    # decayed_heavy_hitters: per-window count decay factor
+    decay: float = 0.9
 
     def __post_init__(self):
         if self.kind not in VALID_KINDS:
@@ -58,18 +71,28 @@ class QuerySpec:
         if self.kind == "histogram" and not (self.bins > 0
                                              and self.hi > self.lo):
             raise ValueError(f"histogram {self.name!r} needs hi > lo, bins > 0")
-        if self.kind == "quantile":
+        if self.kind in ("quantile", "windowed_quantile"):
             if not self.qs:
-                raise ValueError(f"quantile {self.name!r} needs qs")
+                raise ValueError(f"{self.kind} {self.name!r} needs qs")
             object.__setattr__(self, "qs", tuple(float(q) for q in self.qs))
-        if self.kind == "heavy_hitters" and self.width & (self.width - 1):
-            raise ValueError(f"heavy_hitters {self.name!r} width must be 2^n")
+        if self.kind == "windowed_quantile" and int(self.window) < 1:
+            raise ValueError(f"windowed_quantile {self.name!r} needs "
+                             f"window >= 1, got {self.window}")
+        if self.kind in ("heavy_hitters", "decayed_heavy_hitters") \
+                and self.width & (self.width - 1):
+            raise ValueError(f"{self.kind} {self.name!r} width must be 2^n")
+        if self.kind == "decayed_heavy_hitters" \
+                and not 0.0 < float(self.decay) < 1.0:
+            raise ValueError(f"decayed_heavy_hitters {self.name!r} needs "
+                             f"decay in (0, 1), got {self.decay}")
 
     @property
     def out_width(self) -> int:
         """Slots this query occupies in the plan's flat answer vector."""
         return {"sum": 1, "count": 1, "mean": 1, "histogram": self.bins,
-                "quantile": len(self.qs), "heavy_hitters": 2 * self.k
+                "quantile": len(self.qs), "heavy_hitters": 2 * self.k,
+                "windowed_quantile": len(self.qs),
+                "decayed_heavy_hitters": 2 * self.k,
                 }[self.kind]
 
 
@@ -111,6 +134,24 @@ class QueryRegistry:
                                width: int = 1024, depth: int = 4):
         return self.register(QuerySpec(name, "heavy_hitters", k=k,
                                        width=width, depth=depth))
+
+    def register_windowed_quantile(self, name: str, qs, capacity: int = 256,
+                                   window: int = 8):
+        """Quantiles over the last ``window`` root windows — the serve
+        plane's "last N minutes" answer (a stream-so-far ``quantile``
+        never forgets old data)."""
+        return self.register(QuerySpec(name, "windowed_quantile",
+                                       qs=tuple(qs), capacity=capacity,
+                                       window=window))
+
+    def register_decayed_heavy_hitters(self, name: str, k: int = 8,
+                                       width: int = 1024, depth: int = 4,
+                                       decay: float = 0.9):
+        """Top-k over an exponentially decayed stream (``decay`` per root
+        window) — recent heavy hitters instead of all-time ones."""
+        return self.register(QuerySpec(name, "decayed_heavy_hitters", k=k,
+                                       width=width, depth=depth,
+                                       decay=decay))
 
     @property
     def specs(self) -> tuple[QuerySpec, ...]:
@@ -154,8 +195,11 @@ class QueryRegistry:
             hist:<lo>:<hi>:<bins>
             q:<q1>:<q2>:...          (quantile sketch)
             hh[:<k>]                 (heavy hitters)
+            wq:<q1>:<q2>:...         (windowed quantile, window 8)
+            dhh[:<k>[:<decay>]]      (decayed heavy hitters)
 
-        e.g. ``--queries sum,count,mean,hist:0:100:32,q:0.5:0.9:0.99,hh``
+        e.g. ``--queries sum,count,mean,hist:0:100:32,q:0.5:0.9:0.99,hh,
+        wq:0.5:0.99,dhh:4:0.9``
         """
         reg = cls()
         for tok in (t.strip() for t in tokens.split(",") if t.strip()):
@@ -174,6 +218,14 @@ class QueryRegistry:
                 elif head == "hh":
                     k = int(parts[1]) if len(parts) > 1 else 8
                     reg.register_heavy_hitters(_unique(reg, "hh"), k=k)
+                elif head == "wq":
+                    qs = tuple(float(p) for p in parts[1:])
+                    reg.register_windowed_quantile(_unique(reg, "wq"), qs)
+                elif head == "dhh":
+                    k = int(parts[1]) if len(parts) > 1 else 8
+                    decay = float(parts[2]) if len(parts) > 2 else 0.9
+                    reg.register_decayed_heavy_hitters(
+                        _unique(reg, "dhh"), k=k, decay=decay)
                 else:
                     raise ValueError(f"unknown query token {tok!r}")
             except (IndexError, ValueError) as e:
@@ -182,7 +234,8 @@ class QueryRegistry:
                 raise ValueError(
                     f"malformed query token {tok!r} "
                     f"(expected e.g. hist:<lo>:<hi>[:<bins>], "
-                    f"q:<q1>[:<q2>...], hh[:<k>]): {e}") from e
+                    f"q:<q1>[:<q2>...], hh[:<k>], wq:<q1>[:<q2>...], "
+                    f"dhh[:<k>[:<decay>]]): {e}") from e
         return reg
 
 

@@ -29,6 +29,27 @@ re-estimate all candidates (old top-k ∪ batch keys) against the fresh
 counts, dedupe, and keep the best ``k``. Estimates only over-count
 (collisions), by at most ``(2/width)·W`` per the standard CM bound.
 
+Windowed / decayed variants (the serve plane's "last N minutes, not
+stream-so-far" answers):
+
+``WindowedQuantileSketch`` — a ring of ``R`` KLL sub-sketches, one per
+root window. Each update writes a FRESH sub-sketch into the head slot
+(evicting the slot written ``R`` windows ago) and advances the head, so
+the ring always holds exactly the last ``R`` windows' summaries. A query
+merges the ring through ``quantile_merge_stacked`` — one compaction
+pass over all ``R`` slots — and answers from the merged summary with
+its honest rank-error bound. Batches that fit the sub-sketch capacity
+are summarised losslessly per window, so the only rank error is the
+query-time merge's.
+
+``hh_decayed_update`` — exponential decay on the SAME
+``HeavyHitterSketch`` state: ``counts ← γ·counts + batch``, so an item
+seen ``t`` windows ago contributes ``γ^t`` of its weight and the top-k
+tracks the *recent* heavy hitters. Decay commutes with the linear CM
+merge (``γ(A+B)+a+b = (γA+a)+(γB+b)``), so the distributed ``psum``
+merge path is unchanged; the CM bound applies with the decayed total
+weight ``Σ γ^t·W_t``.
+
 Merge algebra (the §III-E distributed query plane rests on this): both
 sketches close under ``merge`` — ``quantile_merge`` folds one summary's
 weighted buffer into another (one compaction when over capacity, both
@@ -327,6 +348,76 @@ def quantile_merge_stacked(key: jax.Array, stacked: QuantileSketch,
     return _fold_all(key, base, incoming, impl=impl)
 
 
+# ------------------------------------------------- windowed quantiles --
+class WindowedQuantileSketch(NamedTuple):
+    """Ring of ``R`` per-window KLL sub-sketches: ``value``/``weight``
+    f32[R, L, C], ``compactions``/``err_q2`` f32[R] (per-slot histories),
+    ``head`` i32[] — the next slot to overwrite. Slot ``head`` holds the
+    oldest window; a query over the ring covers exactly the last ``R``
+    updates."""
+
+    value: jnp.ndarray
+    weight: jnp.ndarray
+    compactions: jnp.ndarray
+    err_q2: jnp.ndarray
+    head: jnp.ndarray
+
+    @property
+    def window(self) -> int:
+        return self.value.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.value.shape[-1]
+
+
+def windowed_quantile_init(capacity: int, window: int
+                           ) -> WindowedQuantileSketch:
+    levels = len(kll_schedule(capacity))
+    r = int(window)
+    return WindowedQuantileSketch(
+        value=jnp.zeros((r, levels, capacity), jnp.float32),
+        weight=jnp.zeros((r, levels, capacity), jnp.float32),
+        compactions=jnp.zeros((r,), jnp.float32),
+        err_q2=jnp.zeros((r,), jnp.float32),
+        head=jnp.zeros((), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def windowed_quantile_update(key: jax.Array, sk: WindowedQuantileSketch,
+                             values: jnp.ndarray, weights: jnp.ndarray, *,
+                             impl: str = "auto") -> WindowedQuantileSketch:
+    """Summarise ONE window's weighted batch into the head slot (fresh
+    sub-sketch — the slot's previous window falls out of scope) and
+    advance the ring. A batch that fits the sub-sketch capacity is
+    summarised exactly (the lossless fold contract)."""
+    levels, cap = sk.value.shape[-2:]
+    sub = QuantileSketch(value=jnp.zeros((levels, cap), jnp.float32),
+                         weight=jnp.zeros((levels, cap), jnp.float32),
+                         compactions=jnp.zeros((), jnp.float32),
+                         err_q2=jnp.zeros((), jnp.float32))
+    sub = quantile_update(key, sub, values, weights, impl=impl)
+    i = sk.head
+    return WindowedQuantileSketch(
+        value=sk.value.at[i].set(sub.value),
+        weight=sk.weight.at[i].set(sub.weight),
+        compactions=sk.compactions.at[i].set(sub.compactions),
+        err_q2=sk.err_q2.at[i].set(sub.err_q2),
+        head=(i + 1) % sk.window)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def windowed_quantile_merged(key: jax.Array, sk: WindowedQuantileSketch, *,
+                             impl: str = "auto") -> QuantileSketch:
+    """Merge the ring's live slots into one query-time summary — exactly
+    ``quantile_merge_stacked`` over the ``[R, ...]`` stacked sub-sketches
+    (empty slots carry zero weight and zero error history, so a not-yet-
+    filled ring answers from the windows it has)."""
+    stacked = QuantileSketch(value=sk.value, weight=sk.weight,
+                             compactions=sk.compactions, err_q2=sk.err_q2)
+    return quantile_merge_stacked(key, stacked, impl=impl)
+
+
 # ---------------------------------------------------------- heavy hitters --
 class HeavyHitterSketch(NamedTuple):
     """``counts`` f32[depth, width] weighted count-min state;
@@ -401,6 +492,27 @@ def hh_update(sk: HeavyHitterSketch, keys: jnp.ndarray,
     delta = sk_ops.cms_update(keys.astype(jnp.uint32), w, sk.depth, sk.width,
                               impl=impl)
     counts = sk.counts + delta
+    cand_key = jnp.concatenate(
+        [sk.key, jnp.where(w > 0.0, keys, HH_EMPTY_KEY)])
+    key_out, est_out = _refresh_topk(counts, cand_key, k_slots)
+    return HeavyHitterSketch(counts=counts, key=key_out, est=est_out)
+
+
+def hh_decayed_update(sk: HeavyHitterSketch, keys: jnp.ndarray,
+                      weights: jnp.ndarray, decay: float, *,
+                      impl: str = "auto") -> HeavyHitterSketch:
+    """Fold one window's weighted key batch into an exponentially decayed
+    CM table: ``counts ← decay·counts + batch``, then refresh the top-k
+    against the decayed counts. An item seen ``t`` windows ago weighs
+    ``decay^t``, so the candidate set tracks the RECENT heavy hitters —
+    a long-retired key's estimate shrinks geometrically until a current
+    key overtakes it. Decay is linear, so the distributed psum merge of
+    per-device tables stays exact (each device decays its own shard)."""
+    k_slots = sk.key.shape[0]
+    w = jnp.maximum(weights, 0.0)
+    delta = sk_ops.cms_update(keys.astype(jnp.uint32), w, sk.depth, sk.width,
+                              impl=impl)
+    counts = jnp.float32(decay) * sk.counts + delta
     cand_key = jnp.concatenate(
         [sk.key, jnp.where(w > 0.0, keys, HH_EMPTY_KEY)])
     key_out, est_out = _refresh_topk(counts, cand_key, k_slots)

@@ -1,0 +1,22 @@
+"""The always-on streaming serve plane (ISSUE 9 / ROADMAP item 1).
+
+``StreamingExecutor`` fronts a compiled pipeline with the subscribe →
+pump → stop lifecycle: per-shard bounded queues with explicit
+backpressure (``queues``), double-buffered host staging that overlaps
+ingest with the in-flight device epoch (``staging``), and
+straggler-tolerant window publication with Eq. 9-widened partial
+answers (``windows``). ``sources`` provides subscribable synthetic and
+deterministic sources plus ``LateShardSource`` straggler injection.
+"""
+from repro.serve.executor import StreamingExecutor
+from repro.serve.queues import POLICIES, BoundedShardQueue
+from repro.serve.sources import (ConstantSource, LateShardSource,
+                                 SyntheticSource)
+from repro.serve.staging import DoubleBuffer, StagedEpoch
+from repro.serve.windows import PublishedWindow, WindowPublisher
+
+__all__ = [
+    "StreamingExecutor", "BoundedShardQueue", "POLICIES", "DoubleBuffer",
+    "StagedEpoch", "WindowPublisher", "PublishedWindow", "ConstantSource",
+    "SyntheticSource", "LateShardSource",
+]
