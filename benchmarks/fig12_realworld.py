@@ -22,14 +22,17 @@ TICKS = 8
 
 
 def run() -> list[dict]:
+    fractions = FRACTIONS[:1] if common.QUICK else FRACTIONS
+    seeds = SEEDS[:1] if common.QUICK else SEEDS
+    ticks = 4 if common.QUICK else TICKS
     rows = []
     for ds, specs in (("taxi", S.taxi_like()), ("pollution", S.pollution_like())):
-        native = run_pipeline(specs, fraction=1.0, ticks=TICKS, seed=1,
+        native = run_pipeline(specs, fraction=1.0, ticks=ticks, seed=1,
                               mode="whs", warmup_ticks=2)
-        for f in FRACTIONS:
+        for f in fractions:
             losses, tps = [], []
-            for s in SEEDS:
-                r = run_pipeline(specs, fraction=f, ticks=TICKS, seed=s,
+            for s in seeds:
+                r = run_pipeline(specs, fraction=f, ticks=ticks, seed=s,
                                  mode="whs", warmup_ticks=2)
                 losses.append(r["accuracy_loss"])
                 tps.append(r["pipeline_items_s"])

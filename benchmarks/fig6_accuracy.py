@@ -25,12 +25,14 @@ def _loss(specs, fraction, mode, seed):
 
 
 def run() -> list[dict]:
+    fractions = FRACTIONS[::2] if common.QUICK else FRACTIONS
+    seeds = SEEDS[:1] if common.QUICK else SEEDS
     rows = []
     for dist, specs in (("gaussian", S.paper_gaussian()),
                         ("poisson", S.paper_poisson())):
-        for f in FRACTIONS:
-            whs = float(np.mean([_loss(specs, f, "whs", s) for s in SEEDS]))
-            srs = float(np.mean([_loss(specs, f, "srs", s) for s in SEEDS]))
+        for f in fractions:
+            whs = float(np.mean([_loss(specs, f, "whs", s) for s in seeds]))
+            srs = float(np.mean([_loss(specs, f, "srs", s) for s in seeds]))
             rows.append({
                 "dist": dist, "fraction": f,
                 "whs_loss": whs, "srs_loss": srs,

@@ -40,7 +40,8 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write all module result rows to PATH as JSON")
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke mode: quick-aware modules (fig7, fig8) "
+                    help="CI smoke mode: quick-aware modules (fig6, fig7, "
+                         "fig8, fig11, fig12) "
                          "shrink their ticks/sweeps/reps to run in seconds; "
                          "pair with --only to restrict to them (wiring check "
                          "only, numbers are not trajectory-grade)")

@@ -185,8 +185,13 @@ _PROGRAM_STATS = {"misses": 0, "hits": 0}
 def _program_entry(sig: tuple, traced_plan) -> dict:
     entry = _PROGRAM_CACHE.get(sig)
     if entry is None:
+        # ``route_keys`` does not parameterize the trace itself (the tick
+        # discovers routing from the state pytree structure) but keys the
+        # cache, so routed and unrouted pipelines own separate trace
+        # counters and jit caches.
         (fanin, capacities, max_sizes, iv, num_strata, allocation,
-         backend, mode, p_level, fraction, telemetry, _plan) = sig
+         backend, mode, p_level, fraction, _route_keys, telemetry,
+         _plan) = sig
         trace_counter = {"traces": 0}
         tick_fn = T._build_scan_tick(
             list(fanin), list(capacities), list(max_sizes), list(iv),
@@ -253,6 +258,7 @@ class CompiledPipeline(QueryRouting):
         self.tenant_names = tuple(t.name for t in spec.tenants)
         self._traced_plan = r.plan.core if r.plan is not None else None
         self.telemetry_enabled = spec.telemetry.enabled
+        self.route_keys = spec.strata.num_keys
         # The telemetry flag sits immediately before the traced-plan
         # element so _with_plan's ``sig[:-1] + (plan.core,)`` slice
         # stays valid across tenant churn.
@@ -261,7 +267,7 @@ class CompiledPipeline(QueryRouting):
             tuple(self.max_sample_sizes), tuple(self.interval_ticks),
             self.num_strata, spec.sampler.allocation, spec.sampler.backend,
             spec.sampler.mode, r.p_level, spec.sampler.fraction,
-            self.telemetry_enabled, self._traced_plan)
+            self.route_keys, self.telemetry_enabled, self._traced_plan)
         entry = _program_entry(self._program_sig, self._traced_plan)
         self.trace_counter = entry["trace_counter"]
         self._tick_fn = entry["tick_fn"]
@@ -358,7 +364,11 @@ class CompiledPipeline(QueryRouting):
         st = TreeState.create(
             self.fanin, self.capacities, self.num_strata,
             qstate=self.plan.init_state() if self.plan is not None else (),
-            telemetry=tel)
+            telemetry=tel,
+            # Round-robin seed table == identity while num_keys ≤
+            # num_strata; the modulo keeps every slot id valid either way.
+            route=(jnp.arange(self.route_keys, dtype=jnp.int32)
+                   % self.num_strata if self.route_keys else ()))
         return PipelineState(tree=st, tick=jnp.int32(1))
 
     def telemetry_snapshot(self, state: PipelineState) -> dict | None:

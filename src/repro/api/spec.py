@@ -38,7 +38,7 @@ class SpecError(ValueError):
 
 _MODES = ("whs", "srs")
 _BACKENDS = ("argsort", "topk", "pallas", "pallas_fused")
-_ALLOCATIONS = ("fair", "proportional")
+_ALLOCATIONS = ("fair", "proportional", "neyman")
 
 
 def _require(cond: bool, msg: str) -> None:
@@ -219,6 +219,43 @@ class TelemetrySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class StrataSpec:
+    """Adaptive stratification (``repro.strata``).
+
+    ``num_keys`` > 0 enables the key→stratum routing table: ingest
+    stratum ids become *keys* gathered through an i32 ``[num_keys]``
+    table carried in the donated tree state (seeded round-robin /
+    identity at ``init``). A host-side split/merge of strata is then a
+    same-shape edit of that leaf — zero retraces. ``adaptive`` runs the
+    online ``StratumManager`` at epoch boundaries (drivers own the
+    loop), splitting slots hotter than ``split_occupancy``× their fair
+    share across a spare slot and merging slots starved below
+    ``merge_occupancy``× of it. 0/False (the default) carries zero
+    extra state leaves and is bitwise the pre-routing pipeline."""
+
+    num_keys: int = 0
+    adaptive: bool = False
+    split_occupancy: float = 2.0
+    merge_occupancy: float = 0.05
+
+    def __post_init__(self):
+        _require(int(self.num_keys) >= 0,
+                 f"strata.num_keys must be >= 0, got {self.num_keys}")
+        object.__setattr__(self, "num_keys", int(self.num_keys))
+        _require(isinstance(self.adaptive, bool),
+                 f"strata.adaptive must be a bool, got {self.adaptive!r}")
+        _require(not self.adaptive or self.num_keys > 0,
+                 "strata.adaptive needs strata.num_keys > 0 (the routing "
+                 "table the manager edits)")
+        _require(float(self.split_occupancy) > 1.0,
+                 f"strata.split_occupancy is a multiple of the fair share "
+                 f"and must be > 1, got {self.split_occupancy}")
+        _require(0.0 <= float(self.merge_occupancy) < 1.0,
+                 f"strata.merge_occupancy must be in [0, 1), got "
+                 f"{self.merge_occupancy}")
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineSpec:
     """The whole job: topology × sampler × tenants × budget policy."""
 
@@ -229,6 +266,7 @@ class PipelineSpec:
     seed: int = 0
     telemetry: TelemetrySpec = dataclasses.field(
         default_factory=TelemetrySpec)
+    strata: StrataSpec = dataclasses.field(default_factory=StrataSpec)
 
     def __post_init__(self):
         object.__setattr__(self, "tenants", tuple(self.tenants))
@@ -239,6 +277,9 @@ class PipelineSpec:
         _require(isinstance(self.telemetry, TelemetrySpec),
                  f"telemetry must be a TelemetrySpec, got "
                  f"{type(self.telemetry).__name__}")
+        _require(isinstance(self.strata, StrataSpec),
+                 f"strata must be a StrataSpec, got "
+                 f"{type(self.strata).__name__}")
         names = [t.name for t in self.tenants]
         if len(set(names)) != len(names):  # build the dup list lazily:
             # an eager f-string here would cost O(n^2) per spec build,
@@ -284,6 +325,7 @@ class PipelineSpec:
         sections = {
             "topology": TopologySpec, "sampler": SamplerSpec,
             "budget": BudgetSpec, "telemetry": TelemetrySpec,
+            "strata": StrataSpec,
         }
         kwargs = {}
         for key, klass in sections.items():

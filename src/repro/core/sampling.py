@@ -55,14 +55,62 @@ def stratum_counts(stratum: jnp.ndarray, valid: jnp.ndarray, num_strata: int) ->
     return jnp.zeros((num_strata + 1,), jnp.float32).at[seg].add(1.0)[:num_strata]
 
 
+def stratum_stds(
+    values: jnp.ndarray, stratum: jnp.ndarray, valid: jnp.ndarray,
+    num_strata: int,
+) -> jnp.ndarray:
+    """Per-stratum value standard deviation over valid items. f32[X].
+
+    Feeds the ``neyman`` allocation policy (``N_i ∝ c_i·σ_i``); empty
+    strata report 0 (their ``c_i·σ_i`` score is 0 anyway)."""
+    seg = jnp.where(valid, stratum, num_strata)
+    v = jnp.where(valid, values.astype(jnp.float32), 0.0)
+    ones = valid.astype(jnp.float32)
+    c = jnp.zeros((num_strata + 1,), jnp.float32).at[seg].add(ones)[:num_strata]
+    s1 = jnp.zeros((num_strata + 1,), jnp.float32).at[seg].add(v)[:num_strata]
+    s2 = jnp.zeros((num_strata + 1,), jnp.float32).at[seg].add(v * v)[:num_strata]
+    safe = jnp.maximum(c, 1.0)
+    var = jnp.maximum(s2 / safe - jnp.square(s1 / safe), 0.0)
+    return jnp.sqrt(var)
+
+
+def _exclusive_prefix(x: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive prefix sum of a 1-D f32 vector via an O(X²) comparison
+    matrix. No ``cumsum``/1-D iota so it lowers inside Pallas TPU kernels
+    (X = num_strata is small, so the quadratic matrix is free)."""
+    n = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    below = jnp.where(jj < ii, jnp.broadcast_to(x[None, :], (n, n)), 0.0)
+    return jnp.sum(below, axis=1)
+
+
+def _settle(alloc, counts, active, budget):
+    """Exact-conservation top-up: hand the not-yet-spent part of ``budget``
+    to the lowest-indexed strata with headroom (a sequential fill expressed
+    as one clip against the exclusive prefix of headroom), so that
+    ``Σ alloc == budget`` holds exactly in f32 integer arithmetic."""
+    alloc = jnp.where(active, jnp.minimum(alloc, counts), 0.0)
+    head = jnp.where(active, counts - alloc, 0.0)
+    leftover = budget - jnp.sum(alloc)
+    give = jnp.clip(leftover - _exclusive_prefix(head), 0.0, head)
+    return alloc + give
+
+
 def allocate_reservoirs(
     sample_size: jnp.ndarray,
     counts: jnp.ndarray,
     *,
     policy: str = "fair",
     water_fill_iters: int = 4,
+    stds: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """``getSampleSize`` (Alg. 2 line 7): split the interval budget across strata.
+
+    Every policy conserves the budget exactly: ``Σ alloc ==
+    min(sample_size, Σ counts)`` (floors and water-fill surpluses are
+    settled deterministically onto strata with headroom, lowest index
+    first), and ``alloc_i ≤ c_i`` always.
 
     ``fair`` (default): equal share per *active* stratum, with water-filling —
     capacity unused by small strata (``c_i < share``) is iteratively
@@ -70,17 +118,76 @@ def allocate_reservoirs(
     robustness (§V-E): a stratum with 0.01% of the items still gets a full
     share of the reservoir.
 
-    ``proportional``: ``N_i ∝ c_i`` (what SRS approximates in expectation);
+    ``proportional``: ``N_i ∝ c_i`` (what SRS approximates in expectation),
+    largest-remainder rounded so rare strata keep their fractional claim;
     kept for ablations.
+
+    ``neyman``: ``N_i ∝ c_i·σ_i`` (minimum-variance allocation for the
+    stratified SUM estimator), water-filled like ``fair``. Requires
+    ``stds`` — the per-stratum value standard deviations.
+
+    ``proportional`` and ``neyman`` both RESERVE one row per non-empty
+    stratum before splitting the remainder. Without the reserve a rare
+    stratum's quota/score rounds to zero and its items are dropped with
+    no weight — a BIAS, not just variance (under ``SKEW_SHARES`` one
+    stratum-D item can carry most of the window's mass). ``fair`` gets
+    the same guarantee from its equal shares.
     """
     counts = counts.astype(jnp.float32)
     active = counts > 0
     n_active = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
     sample_size = jnp.asarray(sample_size, jnp.float32)
+    # The spendable budget: strata can never absorb more than their counts.
+    budget = jnp.minimum(sample_size, jnp.sum(counts))
+
+    if policy in ("proportional", "neyman"):
+        # One-row unbiasedness reserve; the sequential clip caps it at the
+        # budget (index order) when budget < #active — same trick as
+        # ``_settle``, Pallas-safe.
+        one = jnp.minimum(counts, 1.0)
+        reserve = jnp.clip(budget - _exclusive_prefix(one), 0.0, one)
+        rem_budget = budget - jnp.sum(reserve)
+        rem_counts = counts - reserve
 
     if policy == "proportional":
-        total = jnp.maximum(jnp.sum(counts), 1.0)
-        return jnp.where(active, jnp.floor(sample_size * counts / total), 0.0)
+        total = jnp.maximum(jnp.sum(rem_counts), 1.0)
+        quota = rem_budget * rem_counts / total  # q_i ≤ c_i−r_i: budget ≤ Σc
+        base = jnp.floor(quota)
+        frac = jnp.where(rem_counts > 0, quota - base, -1.0)
+        n_extra = jnp.round(rem_budget - jnp.sum(base))
+        # Largest-remainder (Hamilton) rounding without a sort: rank_i =
+        # |{j : frac_j > frac_i, ties to the lower index}|, Pallas-safe.
+        n = counts.shape[0]
+        ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+        jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+        fr_j = jnp.broadcast_to(frac[None, :], (n, n))
+        fr_i = jnp.broadcast_to(frac[:, None], (n, n))
+        ahead = (fr_j > fr_i) | ((fr_j == fr_i) & (jj < ii))
+        rank = jnp.sum(ahead.astype(jnp.float32), axis=1)
+        alloc = reserve + base + jnp.where((rem_counts > 0)
+                                           & (rank < n_extra), 1.0, 0.0)
+        return _settle(alloc, counts, active, budget)
+
+    if policy == "neyman":
+        if stds is None:
+            raise ValueError("neyman allocation requires per-stratum stds")
+        sigma = jnp.maximum(stds.astype(jnp.float32), 1e-6)
+        score = jnp.where(active, counts * sigma, 0.0)
+
+        def neyman_body(_, alloc):
+            # Strata already at capacity drop out; the unspent budget is
+            # re-split ∝ c·σ among the rest.
+            uncapped = active & (alloc < counts)
+            s = jnp.where(uncapped, score, 0.0)
+            s_tot = jnp.maximum(jnp.sum(s), 1e-30)
+            spare = budget - jnp.sum(alloc)
+            return jnp.minimum(alloc + jnp.floor(spare * s / s_tot), counts)
+
+        s_tot0 = jnp.maximum(jnp.sum(score), 1e-30)
+        alloc0 = jnp.minimum(reserve + jnp.floor(rem_budget * score / s_tot0),
+                             counts)
+        alloc = jax.lax.fori_loop(0, water_fill_iters, neyman_body, alloc0)
+        return _settle(alloc, counts, active, budget)
 
     if policy != "fair":
         raise ValueError(f"unknown allocation policy: {policy}")
@@ -95,11 +202,13 @@ def allocate_reservoirs(
         bump = jnp.where(capped, jnp.floor(surplus / n_capped), 0.0)
         return jnp.where(active, used + bump, 0.0)
 
-    share = jnp.where(active, jnp.floor(sample_size / n_active), 0.0)
+    share = jnp.where(active, jnp.floor(budget / n_active), 0.0)
     alloc = jax.lax.fori_loop(0, water_fill_iters, body, share)
     # N_i > c_i and N_i = c_i are equivalent (all items kept, weight 1), so
-    # clamping to c_i loses nothing and makes Y_i = N_i hold when saturated.
-    return jnp.where(active, jnp.minimum(alloc, counts), 0.0)
+    # clamping to c_i loses nothing and makes Y_i = N_i hold when saturated;
+    # the settle pass then restores the division remainder and any
+    # water-fill surplus dropped by the floors.
+    return _settle(alloc, counts, active, budget)
 
 
 def stratified_priority_sample(

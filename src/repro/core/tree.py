@@ -494,6 +494,15 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
             trace_counter["traces"] += 1
         lv = {f: list(getattr(state, f)) for f in TreeState.LEVEL_FIELDS}
 
+        # Adaptive stratification: when a routing table rides in the state,
+        # ingest stratum ids are *keys* gathered through the (traced,
+        # host-editable) key→stratum table. The identity table is a
+        # bitwise no-op; a split/merge between epochs is a same-shape edit
+        # of the leaf (``repro.strata.StratumManager``) — zero retraces.
+        if not isinstance(state.route, tuple):
+            num_keys = state.route.shape[0]
+            ing_s = state.route[jnp.clip(ing_s, 0, num_keys - 1)]
+
         # Source → level-0 delivery (one slice of the epoch's ingest batch).
         # With a 1-tick level-0 interval the buffer is empty here (it
         # flushed last tick), so the append is a scatter-free overwrite.
@@ -663,7 +672,7 @@ def _build_scan_tick(fanin, capacities, sample_sizes, interval_ticks,
 
         new_state = TreeState(
             **{f: tuple(lv[f]) for f in TreeState.LEVEL_FIELDS},
-            qstate=q_out, telemetry=new_tel)
+            qstate=q_out, telemetry=new_tel, route=state.route)
         out = root_out + (jnp.stack(n_fwd_levels),)
         return new_state, out
 
@@ -766,12 +775,19 @@ class HostTree:
         # them between ticks/epochs with zero retraces. Defaults to
         # ``sample_sizes`` (fixed-budget operation).
         max_sample_sizes: list[int] | None = None,
+        # Adaptive stratification (scan engine only): number of ingest
+        # stratum *keys*. When set, ingest strata are routed through a
+        # key→stratum table seeded to identity; ``set_route`` installs a
+        # split/merge remap between epochs at zero retraces.
+        route_keys: int | None = None,
     ):
         from repro.core.window import LevelState, TreeState, Window
 
         assert fanin[-1] == 1, "last level must be the single root"
         assert mode in ("whs", "srs")
         assert engine in ("level", "loop", "scan")
+        assert route_keys is None or engine == "scan", \
+            "adaptive stratum routing needs the scan engine"
         self.fanin = fanin
         self.num_strata = num_strata
         self.allocation = allocation
@@ -827,7 +843,9 @@ class HostTree:
             self._state = TreeState.create(
                 fanin, self.capacities, num_strata,
                 qstate=self.plan.init_state() if self.plan is not None
-                else ())
+                else (),
+                route=(jnp.arange(int(route_keys), dtype=jnp.int32)
+                       if route_keys else ()))
             self._trace_counter = {"traces": 0}
             self._tick_fn = _build_scan_tick(
                 fanin, self.capacities, self.max_sample_sizes, interval_ticks,
@@ -876,6 +894,8 @@ class HostTree:
             sampler_backend=spec.sampler.backend,
             queries=r.plan,
             max_sample_sizes=list(r.max_sample_sizes),
+            route_keys=(spec.strata.num_keys or None)
+            if engine == "scan" else None,
         )
 
     def ingest(self, node: int, values: np.ndarray, strata: np.ndarray) -> None:
@@ -963,6 +983,17 @@ class HostTree:
             self._state = self._state._replace(qstate=self.plan.init_state())
         else:
             self._qstate = self.plan.init_state()
+
+    def set_route(self, route) -> None:
+        """Install a new key→stratum routing table (adaptive
+        stratification). A same-shape leaf edit on the donated state —
+        the next epoch runs the remapped strata with zero retraces."""
+        assert self.engine == "scan", "routing lives in the scan state"
+        assert not isinstance(self._state.route, tuple), \
+            "tree was built without route_keys"
+        r = jnp.asarray(route, jnp.int32)
+        assert r.shape == self._state.route.shape, "route shape is static"
+        self._state = self._state._replace(route=r)
 
     def set_sample_sizes(self, sizes) -> None:
         """Move the applied per-level sample budgets (closed-loop knob).

@@ -69,7 +69,12 @@ def whsamp(
     """
     be = sampling.get_backend(backend)
     c = be.counts(batch.stratum, batch.valid, num_strata)
-    reservoirs = sampling.allocate_reservoirs(sample_size, c, policy=allocation)
+    stds = None
+    if allocation == "neyman":
+        stds = sampling.stratum_stds(batch.value, batch.stratum, batch.valid,
+                                     num_strata)
+    reservoirs = sampling.allocate_reservoirs(sample_size, c,
+                                              policy=allocation, stds=stds)
 
     def run_select():
         # Priorities are drawn here (not inside the backend) so every
@@ -131,9 +136,18 @@ def level_whsamp(
 
     c = be.counts(comp, flat_valid, n_nodes * num_strata)
     c = c.reshape(n_nodes, num_strata)
-    reservoirs = jax.vmap(
-        lambda ci: sampling.allocate_reservoirs(sample_size, ci, policy=allocation)
-    )(c)
+    if allocation == "neyman":
+        stds = sampling.stratum_stds(
+            values.reshape(-1), comp, flat_valid, n_nodes * num_strata,
+        ).reshape(n_nodes, num_strata)
+        reservoirs = jax.vmap(
+            lambda ci, si: sampling.allocate_reservoirs(
+                sample_size, ci, policy=allocation, stds=si)
+        )(c, stds)
+    else:
+        reservoirs = jax.vmap(
+            lambda ci: sampling.allocate_reservoirs(sample_size, ci, policy=allocation)
+        )(c)
 
     def run_select():
         # The priority draw lives inside the selection branch so the

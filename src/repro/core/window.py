@@ -156,20 +156,30 @@ class TreeState(NamedTuple):
     # extra dispatches. ``()`` (zero leaves) when telemetry is disabled —
     # checkpoints, donation, and epoch shapes are untouched by default.
     telemetry: tuple = ()
+    # Optional adaptive-stratification routing table: i32 ``[num_keys]``
+    # mapping ingest stratum keys → sampling strata (slots). The scan tick
+    # gathers through it at source ingest, so a host-side split/merge of
+    # strata (``repro.strata.StratumManager``) is a pure same-shape edit
+    # of this leaf — zero retraces, exactly like a telemetry reset. ``()``
+    # (zero leaves) when routing is disabled: ingest strata are used as-is.
+    route: tuple = ()
 
     # The per-level buffer fields (everything except the root-owned
-    # ``qstate`` and ``telemetry``) — what the scan tick iterates over
-    # level by level.
+    # ``qstate``, ``telemetry`` and ``route``) — what the scan tick
+    # iterates over level by level.
     LEVEL_FIELDS = ("values", "strata", "fill", "dropped", "w_in", "c_in",
                     "wc_acc", "c_acc", "seen")
 
     @staticmethod
     def create(fanin: list[int], capacities: list[int],
                num_strata: int, qstate: tuple = (),
-               telemetry: tuple = ()) -> "TreeState":
+               telemetry: tuple = (), route: tuple = ()) -> "TreeState":
         """Fresh (empty-buffer, identity-metadata) whole-tree state;
         ``qstate`` seeds the root's query-sketch state (pass the
-        compiled plan's ``init_state()`` when queries are registered)."""
+        compiled plan's ``init_state()`` when queries are registered);
+        ``route`` seeds the key→stratum routing table (pass an identity
+        ``jnp.arange(num_keys, dtype=jnp.int32)`` to enable adaptive
+        stratification)."""
         import jax.numpy as jnp
 
         x = num_strata
@@ -183,7 +193,7 @@ class TreeState(NamedTuple):
             w_in=tuple(jnp.ones((n, x), jnp.float32) for n in fanin),
             c_in=zx(jnp.float32), wc_acc=zx(jnp.float32),
             c_acc=zx(jnp.float32), seen=zx(bool), qstate=qstate,
-            telemetry=telemetry,
+            telemetry=telemetry, route=route,
         )
 
 

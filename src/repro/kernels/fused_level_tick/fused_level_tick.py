@@ -147,7 +147,22 @@ def _kernel(values_ref, strata_ref, valid_ref, prio_ref, win_ref, cin_ref,
 
     # --- counts + reservoir allocation (VMEM-resident accumulators) ------
     c = jnp.sum(onehot_f, axis=0)                               # f32[X]
-    reservoirs = allocate_reservoirs(size_ref[0, 0], c, policy=allocation)
+    stds = None
+    if allocation == "neyman":
+        # Per-stratum value moments on the MXU: invalid items contribute
+        # nothing (their one-hot row is all-zero), so Σv / Σv² per stratum
+        # come out of two more passes over the VMEM-resident buffer.
+        s1 = jax.lax.dot_general(
+            onehot_f, v[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        s2 = jax.lax.dot_general(
+            onehot_f, (v * v)[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        safe = jnp.maximum(c, 1.0)
+        var = jnp.maximum(s2 / safe - jnp.square(s1 / safe), 0.0)
+        stds = jnp.sqrt(var)
+    reservoirs = allocate_reservoirs(size_ref[0, 0], c, policy=allocation,
+                                     stds=stds)
     c_ref[0, :] = c
     res_ref[0, :] = reservoirs
 

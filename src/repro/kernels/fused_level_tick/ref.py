@@ -30,14 +30,18 @@ def fused_level_tick(
 ):
     n, cap = values.shape
 
-    def node(s_row, m_row, u_row):
+    def node(v_row, s_row, m_row, u_row):
         c = sampling.stratum_counts(s_row, m_row, num_strata)
-        res = sampling.allocate_reservoirs(sample_size, c, policy=allocation)
+        stds = None
+        if allocation == "neyman":
+            stds = sampling.stratum_stds(v_row, s_row, m_row, num_strata)
+        res = sampling.allocate_reservoirs(sample_size, c, policy=allocation,
+                                           stds=stds)
         keep = sampling.stratified_priority_sample(
             None, s_row, m_row, res, num_strata, priorities=u_row)
         return c, res, keep
 
-    c, reservoirs, keep = jax.vmap(node)(strata, valid, priorities)
+    c, reservoirs, keep = jax.vmap(node)(values, strata, valid, priorities)
     y, meta = whs._whs_meta(c, reservoirs, w_in, c_in, async_calibration)
     values_c, strata_c, n_keep = whs.pack_rows(values, strata, keep,
                                                out_capacity)

@@ -57,7 +57,8 @@ def build_spec(specs=None, *, fraction: float, capacity: int | None = None,
                sampler_backend: str = "topk", queries=None,
                target_rel_error: float | None = None,
                max_fraction: float | None = None,
-               telemetry: bool = False) -> PipelineSpec:
+               telemetry: bool = False,
+               strata=None) -> PipelineSpec:
     """The §V testbed job as ONE declarative ``PipelineSpec`` — what
     every driver (this CLI, benchmarks, examples) constructs and hands
     to ``repro.api.compile`` / ``HostTree.from_spec``.
@@ -81,8 +82,10 @@ def build_spec(specs=None, *, fraction: float, capacity: int | None = None,
         tenants = tuple(queries)
     else:
         tenants = (TenantSpec.from_registry("default", queries),)
-    from repro.api.spec import TelemetrySpec
+    from repro.api.spec import StrataSpec, TelemetrySpec
 
+    if strata is None:
+        strata = StrataSpec()
     return PipelineSpec(
         topology=TopologySpec(fanin=tuple(fanin), capacity=capacity,
                               interval_ticks=(tuple(interval_ticks)
@@ -95,6 +98,7 @@ def build_spec(specs=None, *, fraction: float, capacity: int | None = None,
                           target_rel_error=target_rel_error),
         seed=seed,
         telemetry=TelemetrySpec(enabled=telemetry),
+        strata=strata,
     )
 
 
@@ -198,7 +202,8 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
                  max_fraction: float | None = None,
                  pipeline_spec: PipelineSpec | None = None,
                  return_stream: bool = False,
-                 telemetry: bool = False):
+                 telemetry: bool = False,
+                 strata=None):
     """Stream → tree → per-window results + ground truth. Returns a dict.
 
     ``capacity=None`` provisions level-0 buffers for the offered load
@@ -248,7 +253,7 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
             interval_ticks=interval_ticks, allocation=allocation, seed=seed,
             mode=mode, sampler_backend=sampler_backend, queries=queries,
             target_rel_error=target_rel_error, max_fraction=max_fraction,
-            telemetry=telemetry)
+            telemetry=telemetry, strata=strata)
     # The spec is the job description: derive every reported/derived
     # quantity from it so an explicitly-passed spec and the legacy
     # keyword path behave identically.
@@ -262,7 +267,18 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
     if engine == "scan":
         tree = _CompiledDriver(api.compile(pipeline_spec))
     else:
+        assert not pipeline_spec.strata.adaptive, (
+            "adaptive stratification rides the scan engine's route leaf")
         tree = HostTree.from_spec(pipeline_spec, engine=engine)
+    manager = None
+    if pipeline_spec.strata.adaptive:
+        from repro import strata as strata_mod
+
+        manager = strata_mod.StratumManager(
+            np.asarray(tree.state.tree.route),
+            pipeline_spec.topology.num_strata,
+            split_occupancy=pipeline_spec.strata.split_occupancy,
+            merge_occupancy=pipeline_spec.strata.merge_occupancy)
     sources = [S.StreamSource(specs, seed=pipeline_spec.seed * 977 + i)
                for i in range(num_sources)]
     controller = None
@@ -392,6 +408,26 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
             tree.run_epoch(t0_tick + e * epoch_t, b.values, b.strata,
                            b.counts, offered=b.offered)
             _feedback(tree.results[n_before:], step=e)
+            if manager is not None and e + 1 < n_epochs:
+                # Epoch boundary: fold this epoch's per-key arrival
+                # counts into the manager and commit any split/merge as
+                # a pure route+metadata edit — same shapes, so the next
+                # epoch reuses the compiled program (zero retraces,
+                # pinned in tests/test_strata.py).
+                from repro import strata as strata_mod
+
+                pos = np.arange(np.shape(b.strata)[-1])[None, None, :]
+                live = pos < np.asarray(b.counts)[..., None]
+                keys = np.asarray(b.strata)[live]
+                kc = np.bincount(keys, minlength=manager.num_keys)
+                km = np.bincount(keys, minlength=manager.num_keys,
+                                 weights=np.abs(np.asarray(b.values)[live]))
+                manager.observe(kc, km)
+                ops = manager.maybe_adapt()
+                if ops:
+                    tree.state = tree.state._replace(
+                        tree=strata_mod.remap_tree_state(
+                            tree.state.tree, ops, manager.route))
     else:
         for t in range(warmup_ticks + 1, warmup_ticks + ticks + 1):
             for i, src in enumerate(sources):
@@ -444,6 +480,11 @@ def run_pipeline(specs, *, fraction: float = 0.1, ticks: int,
     if controller is not None:
         extras["controller"] = trajectory
         extras["final_sample_sizes"] = list(tree.sample_sizes)
+    if manager is not None:
+        import dataclasses as _dc
+
+        extras["strata_ops"] = [_dc.asdict(op) for op in manager.ops_log]
+        extras["strata_route"] = np.asarray(tree.state.tree.route).tolist()
     if engine == "scan" and getattr(tree.pipe, "telemetry_enabled", False):
         from repro.obs.metrics import metrics_text
         from repro.obs.telemetry import snapshot, tenant_rel_bounds
@@ -686,7 +727,16 @@ def main(argv=None):
     ap.add_argument("--fraction", type=float, default=0.1)
     ap.add_argument("--ticks", type=int, default=20)
     ap.add_argument("--allocation", default="fair",
-                    choices=["fair", "proportional"])
+                    choices=["fair", "proportional", "neyman"],
+                    help="per-stratum reservoir split: fair = equal "
+                         "water-filled shares, proportional = largest-"
+                         "remainder by arrival count, neyman = count×std "
+                         "optimal (the adaptive arm of Fig. 11c)")
+    ap.add_argument("--adaptive-strata", action="store_true",
+                    help="scan engine: split hot / merge starved strata "
+                         "at epoch boundaries via the key→stratum route "
+                         "table (repro.strata) — a pure state edit, no "
+                         "recompiles")
     ap.add_argument("--mode", default="whs", choices=["whs", "srs"])
     ap.add_argument("--engine", default="level",
                     choices=["level", "loop", "scan"],
@@ -749,6 +799,13 @@ def main(argv=None):
     if args.telemetry and args.mesh is None and args.engine != "scan":
         # telemetry leaves live in the compiled runtimes' donated state
         args.engine = "scan"
+    strata_spec = None
+    if args.adaptive_strata:
+        from repro.api.spec import StrataSpec
+
+        assert args.mesh is None, "--adaptive-strata needs the scan engine"
+        args.engine = "scan"   # the route leaf lives in the scan state
+        strata_spec = StrataSpec(num_keys=len(specs), adaptive=True)
     if args.mesh is not None:
         r = run_spmd_pipeline(
             specs, fraction=args.fraction, ticks=args.ticks,
@@ -765,13 +822,17 @@ def main(argv=None):
                          queries=registry,
                          target_rel_error=args.target_rel_error,
                          max_fraction=args.max_fraction,
-                         telemetry=args.telemetry)
+                         telemetry=args.telemetry, strata=strata_spec)
     print(f"dist={args.dist} mode={args.mode} engine={r['engine']} "
           f"backend={args.backend} fraction={r['fraction']:.0%}"
           + (f" mesh={r['n_devices']}dev" if args.mesh else ""))
     print(f"  SUM ≈ {r['approx_sum']:.4e} ± {r['bound_2sigma']:.2e} "
           f"(exact {r['exact_sum']:.4e}; within 2σ: {r['within_2sigma']})")
     print(f"  accuracy loss  {r['accuracy_loss']:.5%}")
+    if "strata_ops" in r:
+        kinds = [op["kind"] for op in r["strata_ops"]]
+        print(f"  strata         {kinds.count('split')} splits, "
+              f"{kinds.count('merge')} merges; route {r['strata_route']}")
     if "bandwidth_fraction" in r:
         print(f"  bandwidth kept {r['bandwidth_fraction']:.1%} of ingested "
               f"items")

@@ -46,6 +46,24 @@ _MERGE_KEY_TAG = 0x4D52
 _WINDOW_MERGE_TAG = 0x574D
 
 
+def stratum_stats(batch: IntervalBatch, num_strata: int):
+    """Pre-sampling per-stratum ``(count, mean, std)`` of one window,
+    from the same shared ``stratum_moments`` pass that feeds the CLT
+    queries. This is the query-plane variance signal for the adaptive
+    stratification plane (``repro.strata``): occupancy says where the
+    arrivals go, std says which strata actually need rows. ``neyman``
+    allocation recomputes the identical moments where the batch lives —
+    ``core.sampling.stratum_stds`` in XLA, a one-hot ``dot_general``
+    inside the fused Pallas tick — so the two views agree bitwise on
+    the same window (pinned in ``tests/test_strata.py``)."""
+    y, s1, s2 = err.stratum_moments(batch.value, batch.stratum,
+                                    batch.valid, num_strata)
+    safe = jnp.maximum(y, 1.0)
+    mean = s1 / safe
+    var = jnp.maximum(s2 / safe - mean * mean, 0.0)
+    return y, mean, jnp.sqrt(var)
+
+
 class CompiledQueryPlan:
     """Static, jit-closable fusion of K specs. All array work is pure."""
 

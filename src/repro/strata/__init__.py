@@ -1,0 +1,7 @@
+"""Adaptive stratification: online stratum split/merge as pure state
+edits on the key→stratum routing table (see ``repro.strata.manager``)."""
+from repro.strata.manager import (            # noqa: F401
+    StratumManager, StratumOp, remap_tree_state,
+)
+
+__all__ = ["StratumManager", "StratumOp", "remap_tree_state"]

@@ -167,3 +167,103 @@ def test_merge_property_distributed_workers():
         ests.append(float(mv.sum() * w))
     bias = abs(np.mean(ests) - vals.sum()) / abs(vals.sum())
     assert bias < 0.02, bias
+
+
+# ------------------------------------------------ allocation properties --
+ALL_POLICIES = ("fair", "proportional", "neyman")
+
+
+def _alloc(policy, budget, counts, stds=None):
+    if policy == "neyman" and stds is None:
+        stds = jnp.ones_like(counts)
+    return np.asarray(sampling.allocate_reservoirs(
+        jnp.float32(budget), jnp.asarray(counts, jnp.float32),
+        policy=policy, stds=stds))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(ALL_POLICIES), st.integers(1, 8),
+       st.integers(0, 3000), st.integers(0, 2 ** 31 - 1))
+def test_allocation_conserves_budget_exactly(policy, num_strata, budget,
+                                             seed):
+    """Σ alloc == min(budget, Σ counts) BITWISE, alloc_i ≤ c_i, alloc ≥ 0 —
+    for every policy (the PR-10 conservation bugfix pin: the old fair
+    water-fill could strand the division remainder, and quota floors
+    could both under- and over-shoot the budget)."""
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 500, num_strata).astype(np.float32)
+    stds = np.abs(rng.normal(1, 5, num_strata)).astype(np.float32)
+    alloc = _alloc(policy, budget, counts, jnp.asarray(stds))
+    assert float(alloc.sum()) == min(float(budget), float(counts.sum())), (
+        policy, counts, alloc)
+    assert (alloc <= counts).all(), (policy, counts, alloc)
+    assert (alloc >= 0).all(), (policy, counts, alloc)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(ALL_POLICIES), st.integers(2, 8),
+       st.integers(0, 2 ** 31 - 1))
+def test_allocation_never_starves_active_strata(policy, num_strata, seed):
+    """Budget ≥ #active ⇒ every non-empty stratum gets ≥ 1 row. Without
+    the one-row reserve a rare stratum's quota/score rounds to zero and
+    its items drop with no weight — bias, not variance."""
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 10_000, num_strata).astype(np.float32)
+    budget = int(max((counts > 0).sum(), 1)) + int(rng.integers(0, 200))
+    alloc = _alloc(policy, budget, counts,
+                   jnp.abs(jnp.asarray(rng.normal(0, 3, num_strata),
+                                       jnp.float32)))
+    assert (alloc[counts > 0] >= 1).all(), (policy, counts, alloc)
+    assert (alloc[counts == 0] == 0).all(), (policy, counts, alloc)
+
+
+def test_rare_stratum_kept_under_skew_shares():
+    """The Fig. 11c regime at fraction 0.1: stratum D is ~0.01% of items
+    but most of the value mass — every policy must keep it non-empty."""
+    from repro.data import stream as S
+
+    rng = np.random.default_rng(7)
+    rates = np.array([8000 * sh for sh in S.SKEW_SHARES])
+    counts = rng.poisson(rates * 2).astype(np.float32)
+    counts[3] = max(counts[3], 1.0)          # D present this interval
+    budget = 0.1 * counts.sum()
+    stds = jnp.asarray([3.2, 9.9, 120.0, 0.0])
+    for policy in ALL_POLICIES:
+        alloc = _alloc(policy, budget, counts, stds)
+        assert alloc[3] >= 1, (policy, counts, alloc)
+
+
+def test_allocation_conserves_inside_fused_kernel():
+    """The fused Pallas tick's in-kernel allocation conserves the budget
+    bitwise and matches the XLA reference for every policy (the kernel
+    computes neyman's stds itself via a one-hot dot_general)."""
+    from repro.kernels.fused_level_tick import ops as ft_ops
+
+    rng = np.random.default_rng(3)
+    n, cap, x = 2, 256, 4
+    vals = rng.normal(60, 25, (n, cap)).astype(np.float32)
+    # heavy skew: stratum 3 rare
+    strata = rng.choice(x, size=(n, cap),
+                        p=[0.80, 0.1899, 0.01, 0.0001]).astype(np.int32)
+    strata[:, -1] = 3
+    valid = np.ones((n, cap), bool)
+    u = rng.random((n, cap)).astype(np.float32)
+    w_in = np.ones((n, x), np.float32)
+    c_in = np.zeros((n, x), np.float32)
+    size = jnp.float32(40.0)
+    for policy in ALL_POLICIES:
+        outs = {}
+        for impl in ("pallas", "ref"):
+            outs[impl] = ft_ops.fused_level_tick(
+                jnp.asarray(vals), jnp.asarray(strata), jnp.asarray(valid),
+                jnp.asarray(u), jnp.asarray(w_in), jnp.asarray(c_in),
+                size, x, cap, allocation=policy, impl=impl)
+        res_p = np.asarray(outs["pallas"][5])
+        res_r = np.asarray(outs["ref"][5])
+        np.testing.assert_array_equal(res_p, res_r, err_msg=policy)
+        c = np.asarray(outs["pallas"][4])
+        for node in range(n):
+            assert float(res_p[node].sum()) == min(40.0,
+                                                   float(c[node].sum())), (
+                policy, node, res_p[node], c[node])
+            assert res_p[node][3] >= 1, (policy, res_p[node])

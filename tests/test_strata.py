@@ -1,0 +1,334 @@
+"""Adaptive stratification (PR 10): allocation conservation across every
+policy and backend, the one-row unbiasedness reserve, the StratumManager
+split/merge planner, the Eq. 9 metadata remap, and the zero-retrace
+contract for route edits. Deterministic (no hypothesis) so the pins run
+everywhere; ``tests/test_sampling.py`` carries hypothesis variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.spec import (BudgetSpec, PipelineSpec, SamplerSpec, SpecError,
+                            StrataSpec, TopologySpec)
+from repro.core import sampling
+from repro.strata import StratumManager, remap_tree_state
+
+X = 4
+POLICIES = ("fair", "proportional", "neyman")
+
+
+def _alloc(policy, budget, counts, stds=None):
+    if policy == "neyman" and stds is None:
+        stds = jnp.ones((len(counts),), jnp.float32)
+    return np.asarray(sampling.allocate_reservoirs(
+        jnp.float32(budget), jnp.asarray(counts, jnp.float32),
+        policy=policy, stds=stds))
+
+
+# ------------------------------------------------------------ allocation --
+def test_allocation_conserves_budget_exactly_all_policies():
+    """Σ alloc == min(budget, Σ counts) BITWISE, 0 ≤ alloc_i ≤ c_i — the
+    PR-10 conservation bugfix pin, over a seeded sweep of shapes,
+    budgets and skews (zero budget, empty strata, saturation included)."""
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 9))
+        counts = rng.integers(0, 500, n).astype(np.float32)
+        budget = float(rng.integers(0, 3000))
+        stds = np.abs(rng.normal(1, 5, n)).astype(np.float32)
+        for policy in POLICIES:
+            alloc = _alloc(policy, budget, counts, jnp.asarray(stds))
+            assert float(alloc.sum()) == min(budget, float(counts.sum())), (
+                policy, seed, counts, alloc)
+            assert (alloc <= counts).all(), (policy, seed, counts, alloc)
+            assert (alloc >= 0).all(), (policy, seed, counts, alloc)
+
+
+def test_allocation_never_starves_active_strata():
+    """Budget ≥ #active ⇒ every non-empty stratum gets ≥ 1 row (the
+    one-row reserve: without it a rare stratum's quota/score rounds to
+    zero and its items drop with NO weight — bias, not variance)."""
+    for seed in range(25):
+        rng = np.random.default_rng(100 + seed)
+        n = int(rng.integers(2, 9))
+        counts = rng.integers(0, 10_000, n).astype(np.float32)
+        budget = int(max((counts > 0).sum(), 1)) + int(rng.integers(0, 200))
+        stds = np.abs(rng.normal(0, 3, n)).astype(np.float32)
+        for policy in POLICIES:
+            alloc = _alloc(policy, budget, counts, jnp.asarray(stds))
+            assert (alloc[counts > 0] >= 1).all(), (policy, counts, alloc)
+            assert (alloc[counts == 0] == 0).all(), (policy, counts, alloc)
+
+
+def test_rare_stratum_kept_under_skew_shares():
+    """The Fig. 11c regime at fraction 0.1: stratum D is ~0.01% of the
+    items but carries most of the value mass — every policy must keep
+    its reservoir non-empty."""
+    from repro.data import stream as S
+
+    rng = np.random.default_rng(7)
+    rates = np.array([8000 * sh for sh in S.SKEW_SHARES])
+    counts = rng.poisson(rates * 2).astype(np.float32)
+    counts[3] = max(counts[3], 1.0)
+    budget = 0.1 * counts.sum()
+    stds = jnp.asarray([3.2, 9.9, 120.0, 0.0])
+    for policy in POLICIES:
+        alloc = _alloc(policy, budget, counts, stds)
+        assert alloc[3] >= 1, (policy, counts, alloc)
+
+
+def test_allocation_conserves_inside_fused_kernel():
+    """The fused Pallas tick's in-kernel allocation conserves the budget
+    bitwise and matches the XLA ref oracle for every policy (neyman's
+    stds come from a one-hot ``dot_general`` inside the kernel)."""
+    from repro.kernels.fused_level_tick import ops as ft_ops
+
+    rng = np.random.default_rng(3)
+    n, cap = 2, 256
+    vals = rng.normal(60, 25, (n, cap)).astype(np.float32)
+    strata = rng.choice(X, size=(n, cap),
+                        p=[0.80, 0.1899, 0.01, 0.0001]).astype(np.int32)
+    strata[:, -1] = 3                       # rare stratum present
+    valid = np.ones((n, cap), bool)
+    u = rng.random((n, cap)).astype(np.float32)
+    w_in = np.ones((n, X), np.float32)
+    c_in = np.zeros((n, X), np.float32)
+    for policy in POLICIES:
+        outs = {
+            impl: ft_ops.fused_level_tick(
+                jnp.asarray(vals), jnp.asarray(strata), jnp.asarray(valid),
+                jnp.asarray(u), jnp.asarray(w_in), jnp.asarray(c_in),
+                jnp.float32(40.0), X, cap, allocation=policy, impl=impl)
+            for impl in ("pallas", "ref")}
+        res_p = np.asarray(outs["pallas"][5])
+        np.testing.assert_array_equal(res_p, np.asarray(outs["ref"][5]),
+                                      err_msg=policy)
+        c = np.asarray(outs["pallas"][4])
+        for node in range(n):
+            assert float(res_p[node].sum()) == min(
+                40.0, float(c[node].sum())), (policy, node)
+            assert res_p[node][3] >= 1, (policy, res_p[node])
+
+
+def test_stratum_stats_matches_sampling_stds():
+    """The query plane's shared-moments view of per-stratum stds agrees
+    with the sampler's (``core.sampling.stratum_stds``) on one window."""
+    from repro.core.types import IntervalBatch, StratumMeta
+    from repro.query.compiler import stratum_stats
+
+    rng = np.random.default_rng(11)
+    m = 512
+    vals = jnp.asarray(rng.normal(30, 12, m), jnp.float32)
+    strata = jnp.asarray(rng.integers(0, X, m), jnp.int32)
+    valid = jnp.asarray(rng.random(m) < 0.8)
+    batch = IntervalBatch(vals, strata, valid, StratumMeta.identity(X))
+    _, _, stds_q = stratum_stats(batch, X)
+    stds_s = sampling.stratum_stds(vals, strata, valid, X)
+    np.testing.assert_allclose(np.asarray(stds_q), np.asarray(stds_s),
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------- manager --
+def test_manager_splits_hot_and_merges_starved():
+    """Coarse route: one hot multi-key slot splits onto a spare slot
+    (heaviest key stays put); a starved slot folds into the lightest
+    active one. The committed route stays a valid key→slot table."""
+    route = np.array([0, 0, 0, 0, 0, 0, 1, 2], np.int32)   # slot 3 spare
+    m = StratumManager(route, 4, split_occupancy=1.5, merge_occupancy=0.1)
+    m.observe(np.array([8000, 2000, 500, 300, 100, 50, 900, 2]))
+    ops = m.maybe_adapt()
+    kinds = sorted(op.kind for op in ops)
+    assert kinds == ["merge", "split"], ops
+    split = next(op for op in ops if op.kind == "split")
+    assert 0 not in split.keys              # heaviest key stays in slot 0
+    assert 0.0 < split.share < 1.0
+    assert m.route.min() >= 0 and m.route.max() < 4
+    # hot slot actually lost mass
+    assert m.slot_occupancy()[0] < 8000 + 2950
+
+
+def test_manager_mass_guard_protects_heavy_rare_stratum():
+    """A slot that is rare by count but carries most of the value mass
+    (the SKEW_SHARES stratum D) must never be merged away — folding its
+    huge items behind a shared sampling weight is a variance cliff."""
+    route = np.arange(4, dtype=np.int32)
+    m = StratumManager(route, 4, merge_occupancy=0.1)
+    counts = np.array([64000.0, 16000.0, 8.0, 1.0])
+    mass = np.array([640e3, 1.6e6, 8e3, 10e6])   # D: one 10M item
+    m.observe(counts, mass)
+    ops = m.maybe_adapt()
+    for op in ops:
+        assert op.src != 3, ops                  # D never a merge source
+    # without the mass signal the same counts DO merge D away
+    m2 = StratumManager(route, 4, merge_occupancy=0.1)
+    m2.observe(counts)
+    assert any(op.src == 3 for op in m2.maybe_adapt())
+
+
+def test_manager_idempotent_when_balanced():
+    m = StratumManager(np.arange(4, dtype=np.int32), 4)
+    m.observe(np.array([100.0, 120.0, 90.0, 110.0]))
+    assert m.maybe_adapt() == []
+    np.testing.assert_array_equal(m.route, np.arange(4))
+
+
+# ----------------------------------------------------------------- remap --
+def _seeded_state(pipe):
+    st = pipe.init()
+    rng = np.random.default_rng(5)
+    f = lambda shape: jnp.asarray(np.abs(rng.normal(2, 1, shape)),
+                                  jnp.float32)
+    tree = st.tree._replace(
+        w_in=tuple(f(a.shape) for a in st.tree.w_in),
+        c_in=tuple(f(a.shape) * 50 for a in st.tree.c_in),
+        wc_acc=tuple(f(a.shape) * 10 for a in st.tree.wc_acc),
+        c_acc=tuple(f(a.shape) * 50 for a in st.tree.c_acc),
+        seen=tuple(jnp.ones(a.shape, bool) for a in st.tree.seen))
+    return st._replace(tree=tree)
+
+
+def _routed_spec(num_keys=8, adaptive=False):
+    return PipelineSpec(
+        topology=TopologySpec(fanin=(4, 2, 1), capacity=512, num_strata=X),
+        sampler=SamplerSpec(mode="whs", backend="topk"),
+        budget=BudgetSpec(sample_sizes=(64, 64, 64)),
+        strata=StrataSpec(num_keys=num_keys, adaptive=adaptive),
+        seed=9)
+
+
+def test_remap_conserves_calibration_mass():
+    """Across any split/merge sequence the per-level ΣC^in, Σwc_acc and
+    Σc_acc are conserved exactly, shapes/dtypes never change, and merge
+    weights are the count-weighted mean (the ``core.window`` merge law)."""
+    pipe = api.compile(_routed_spec())
+    st = _seeded_state(pipe)
+    m = StratumManager(np.asarray(st.tree.route), X,
+                       split_occupancy=1.2, merge_occupancy=0.2)
+    kc = np.array([9000, 4000, 2500, 800, 30, 10, 4, 1], np.float64)
+    m.observe(kc, kc)          # mass ∝ counts: the starved slot is truly cold
+    ops = m.maybe_adapt()
+    assert ops, "constructed skew must trigger at least one op"
+    new_tree = remap_tree_state(st.tree, ops, m.route)
+    for name in ("w_in", "c_in", "wc_acc", "c_acc", "seen"):
+        for a, b in zip(getattr(st.tree, name), getattr(new_tree, name)):
+            assert a.shape == b.shape and a.dtype == b.dtype, name
+    for name in ("c_in", "wc_acc", "c_acc"):
+        for a, b in zip(getattr(st.tree, name), getattr(new_tree, name)):
+            np.testing.assert_allclose(float(jnp.sum(a)), float(jnp.sum(b)),
+                                       rtol=1e-5, err_msg=name)
+
+
+def test_split_merge_zero_retrace():
+    """Committing a route remap between epochs reuses the compiled
+    program — the padded-slot contract extended to stratification. Both
+    the trace counter and the program cache are pinned."""
+    from repro.api.pipeline import program_cache_stats
+
+    pipe = api.compile(_routed_spec())
+    rng = np.random.default_rng(2)
+    ticks, n0, width = 2, 4, 300
+    vals = rng.normal(50, 9, (ticks, n0, width)).astype(np.float32)
+    strs = rng.integers(0, 8, (ticks, n0, width)).astype(np.int32)
+    counts = rng.integers(100, width, (ticks, n0)).astype(np.int32)
+    st = pipe.init()
+    st, wa0 = pipe.run_epoch(st, pipe.default_key, vals, strs, counts)
+    traces = pipe.trace_counter["traces"]
+    misses = program_cache_stats()["misses"]
+    m = StratumManager(np.asarray(st.tree.route), X,
+                       split_occupancy=1.2, merge_occupancy=0.2)
+    kc = np.array([9000, 4000, 2500, 800, 30, 10, 4, 1], np.float64)
+    m.observe(kc, kc)          # mass ∝ counts: the starved slot is truly cold
+    ops = m.maybe_adapt()
+    assert ops
+    st = st._replace(tree=remap_tree_state(st.tree, ops, m.route))
+    st, wa1 = pipe.run_epoch(st, pipe.default_key, vals, strs, counts)
+    assert pipe.trace_counter["traces"] == traces, "route edit retraced!"
+    assert program_cache_stats()["misses"] == misses
+    assert np.isfinite(np.asarray(wa1.sum)).all()
+
+
+def test_identity_route_is_bitwise_noop():
+    """A pipeline with the identity routing table produces bit-identical
+    windows to one compiled without routing (the gather really is a
+    no-op, not merely statistically neutral)."""
+    rng = np.random.default_rng(8)
+    ticks, n0, width = 2, 4, 300
+    vals = rng.normal(50, 9, (ticks, n0, width)).astype(np.float32)
+    strs = rng.integers(0, X, (ticks, n0, width)).astype(np.int32)
+    counts = rng.integers(100, width, (ticks, n0)).astype(np.int32)
+    outs = {}
+    for label, keys in (("routed", X), ("plain", 0)):
+        pipe = api.compile(_routed_spec(num_keys=keys))
+        st = pipe.init()
+        st, wa = pipe.run_epoch(st, pipe.default_key, vals, strs, counts)
+        outs[label] = wa
+    for field in ("sum", "sum_var", "n_sampled", "histogram"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(outs["routed"], field)),
+            np.asarray(getattr(outs["plain"], field)), err_msg=field)
+
+
+def test_coarse_route_remains_unbiased():
+    """Routing 8 keys onto 4 slots (and then remapping mid-run) keeps the
+    windowed SUM estimate unbiased: the estimate stays within its own
+    ±2σ bound of the exact ingest sum."""
+    pipe = api.compile(_routed_spec())
+    rng = np.random.default_rng(21)
+    ticks, n0, width = 4, 4, 300
+    st = pipe.init()
+    # coarse initial table: key k → slot k % 4 (two keys per slot)
+    total, est, var = 0.0, 0.0, 0.0
+    m = StratumManager(np.asarray(st.tree.route), X)
+    for epoch in range(2):
+        vals = np.abs(rng.normal(50, 9, (ticks, n0, width))).astype(
+            np.float32)
+        strs = rng.integers(0, 8, (ticks, n0, width)).astype(np.int32)
+        counts = rng.integers(100, width, (ticks, n0)).astype(np.int32)
+        mask = np.arange(width)[None, None, :] < counts[..., None]
+        total += float(vals[mask].sum())
+        st, wa = pipe.run_epoch(st, pipe.default_key, vals, strs, counts)
+        est += float(np.asarray(wa.sum).sum())
+        var += float(np.asarray(wa.sum_var).sum())
+        keys = strs[mask]
+        m.observe(np.bincount(keys, minlength=8),
+                  np.bincount(keys, minlength=8,
+                              weights=np.abs(vals[mask])))
+        ops = m.maybe_adapt()
+        if ops:
+            st = st._replace(tree=remap_tree_state(st.tree, ops, m.route))
+    assert abs(est - total) <= max(2.0 * np.sqrt(var), 0.02 * total), (
+        est, total)
+
+
+# ------------------------------------------------------------------ spec --
+def test_strata_spec_validation():
+    with pytest.raises(SpecError):
+        StrataSpec(num_keys=0, adaptive=True)     # adaptive needs a table
+    with pytest.raises(SpecError):
+        StrataSpec(num_keys=4, split_occupancy=0.5)
+    with pytest.raises(SpecError):
+        StrataSpec(num_keys=4, merge_occupancy=1.5)
+    s = _routed_spec(num_keys=8, adaptive=True)
+    rt = PipelineSpec.from_dict(s.to_dict())
+    assert rt.strata == s.strata
+
+
+def test_run_pipeline_adaptive_end_to_end():
+    """The analytics driver's epoch hook: adaptive run commits ops,
+    reports the final route, and stays at least as accurate as the
+    static-fair arm on the skewed stream."""
+    from repro.api.spec import StrataSpec as SS
+    from repro.data import stream as S
+    from repro.launch.analytics import run_pipeline
+
+    specs = S.paper_poisson(
+        rates=tuple(8000 * sh for sh in S.SKEW_SHARES), skewed=True)
+    kw = dict(fraction=0.1, ticks=4, seed=2, mode="whs", engine="scan",
+              warmup_ticks=1, epoch_ticks=2)
+    r_fair = run_pipeline(specs, allocation="fair", **kw)
+    r_ad = run_pipeline(specs, allocation="neyman",
+                        strata=SS(num_keys=len(specs), adaptive=True), **kw)
+    assert "strata_ops" in r_ad and "strata_route" in r_ad
+    assert len(r_ad["strata_route"]) == len(specs)
+    assert r_ad["accuracy_loss"] <= max(r_fair["accuracy_loss"], 1e-3)
